@@ -1,0 +1,67 @@
+"""Per-strategy collective-byte comparison on a transformer MLP stack.
+
+The framework-scale analogue of the paper's Table 1 mechanism: for the same
+layer compute, how many bytes does each TP strategy put on the interconnect?
+Measured with the jaxpr static analyzer on the full distributed loss
+(embedding -> layers -> lm head) of a small-but-structured config, per PE.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.static_cost import analyze_fn
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.partition import DATA, MODEL, MeshPlan
+from repro.train.step import make_loss_fn
+from repro.launch import specs as sp
+from repro.configs.shapes import Shape
+
+
+def run(report):
+    if len(jax.devices()) < 16:
+        report("comm_volume", 0, "skipped: <16 devices")
+        return
+    mesh = jax.make_mesh((1, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=jax.devices()[:16])
+    plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+    cfg = ModelConfig(name="bench", family="dense", d_model=1024, n_layers=4,
+                      n_heads=16, n_kv_heads=8, d_ff=4096, vocab_size=32768,
+                      param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                      attn_block_kv=512)
+    shape = Shape("b", 2048, 4, "train")
+    base = {}
+    for strat in ("cannon", "allgather", "summa"):
+        loss_fn, specs, pctx = make_loss_fn(cfg, mesh, plan,
+                                            tp_strategy=strat)
+        args = (pm.abstract_params(specs), sp.train_batch_specs(cfg, shape))
+        s = analyze_fn(loss_fn, *args, axis_sizes={"data": 1, "model": 16})
+        base[strat] = s
+        report(f"comm_{strat}_coll_GB", round(s["coll_bytes"] / 1e9, 3),
+               " ".join(f"{k}={v/1e9:.2f}G"
+                        for k, v in sorted(s["coll_by_type"].items())))
+        report(f"comm_{strat}_flops", f"{s['flops']:.3g}", "per device fwd")
+    for strat in ("allgather", "summa"):
+        report(f"comm_ratio_{strat}_over_cannon",
+               round(base[strat]["coll_bytes"]
+                     / max(base["cannon"]["coll_bytes"], 1), 2),
+               "wire bytes, fwd loss")
+
+    # Analytic 1D Megatron-SP reference (production baseline): per layer,
+    # forward: AG x over 16 for QKV-in + MLP-in (2x) + RS outputs (2x):
+    # 4 * (15/16) * T_ds * D bytes; attention itself local (heads 16-way).
+    T_ds, D = 4 * 2048, cfg.d_model
+    per_layer = 4 * (15 / 16) * T_ds * D * 2            # bf16
+    lm_head = 2 * (15 / 16) * T_ds * D * 2
+    megatron = per_layer * cfg.n_layers + lm_head
+    report("comm_megatron1d_coll_GB", round(megatron / 1e9, 3),
+           "analytic, fwd loss, same shapes")
+    report("comm_ratio_megatron_over_cannon",
+           round(megatron / max(base["cannon"]["coll_bytes"], 1), 2),
+           "wire bytes, fwd loss")

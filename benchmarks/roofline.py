@@ -1,0 +1,174 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run reports.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+  memory term     = HBM_traffic_floor_per_device / HBM_bw      [s]
+  collective term = collective_bytes_per_device / ICI_bw       [s]
+
+FLOPs and collective bytes come from the scan-corrected jaxpr analyzer
+(benchmarks/static_cost; XLA's cost_analysis visits while bodies once, so
+its raw numbers — also recorded in the dry-run JSON — undercount scanned
+layers).  The memory term is a fusion-aware traffic floor:
+
+  train   : params bf16 read fwd + read bwd + grad rw + optimizer m/v fp32
+            read+write + param write  (~13x local param bytes)
+            + XLA temp buffer size (activation-residency proxy)
+  prefill : params once + temps
+  decode  : params once (weights dominate the GEMV) + cache read/write + temps
+
+Capacity (fits-in-HBM) uses XLA's memory_analysis: args + outputs + temps -
+aliased.  Cells over 16 GB/chip are flagged, not hidden — kimi-K2 training
+on one 256-chip v5e pod genuinely does not fit (it needs multi-pod or ZeRO
+sharding; see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16, TPU v5e-class chip
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9
+
+def active_matmul_params(cfg) -> float:
+    """Per-token active matmul params (MoE: only top-k experts' weights;
+    embedding lookup excluded, LM head included) — the N in
+    MODEL_FLOPS = 6 N T (train) / 2 N T (inference)."""
+    q = r = 4
+    per_layer = {}
+    hd = cfg.hd() if cfg.n_heads else 0
+    attn = 0
+    if cfg.n_heads:
+        hp = cfg.heads_padded(r)
+        kvs = cfg.kv_stored(r)[0]
+        attn = cfg.d_model * (hp * hd + 2 * kvs * hd) + hp * hd * cfg.d_model
+    mlp = 0
+    if cfg.d_ff:
+        n_mats = 3 if cfg.act == "swiglu" else 2
+        mlp = n_mats * cfg.d_model * cfg.d_ff
+    moe = 0
+    if cfg.n_experts:
+        moe = cfg.top_k * 3 * cfg.d_model * cfg.d_ff_expert \
+            + cfg.d_model * cfg.n_experts          # router
+    mamba = 0
+    if cfg.d_inner:
+        gn = cfg.ssm_groups * cfg.ssm_state
+        mamba = cfg.d_model * (2 * cfg.d_inner + 2 * gn + cfg.ssm_heads) \
+            + cfg.d_inner * cfg.d_model
+    total = 0.0
+    for mixer, ffn in cfg.pattern():
+        total += attn if mixer == "attn" else mamba
+        total += {"mlp": mlp, "moe": moe, "none": 0}[ffn]
+    total *= cfg.n_groups()
+    if cfg.enc_layers:   # encoder layers + per-decoder-layer cross attn
+        total += cfg.enc_layers * (attn + mlp) + cfg.n_layers * attn
+    total += cfg.d_model * cfg.vocab_size        # lm head
+    return float(total)
+
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def _local_param_bytes(rep: Dict) -> float:
+    # stored params are 16-way model-sharded, replicated over data/pod
+    return rep["param_bytes_stored"] / 16
+
+
+def _memory_traffic_floor(rep: Dict) -> float:
+    p = _local_param_bytes(rep)
+    mem = rep.get("memory", {})
+    tmp = float(mem.get("temp_size_in_bytes", 0))
+    arg = float(mem.get("argument_size_in_bytes", 0))
+    kind = rep["kind"]
+    if kind == "train":
+        # p(bf16): fwd read + bwd read + grad rw (2p) + opt m+v fp32 rw (8p)
+        # + param write
+        return 13 * p + tmp
+    if kind == "prefill":
+        return p + tmp
+    cache = max(arg - p, 0.0)            # decode args = params + cache
+    return p + 2 * cache + tmp
+
+
+def _hbm_resident(rep: Dict) -> float:
+    mem = rep.get("memory", {})
+    return (float(mem.get("argument_size_in_bytes", 0))
+            + float(mem.get("output_size_in_bytes", 0))
+            + float(mem.get("temp_size_in_bytes", 0))
+            - float(mem.get("alias_size_in_bytes", 0)))
+
+
+def terms(rep: Dict) -> Optional[Dict]:
+    if rep.get("status") != "ok":
+        return None
+    st = rep["static"]
+    n_dev = rep["n_devices"]
+    t_compute = st["flops"] / PEAK_FLOPS
+    traffic = _memory_traffic_floor(rep)
+    t_memory = traffic / HBM_BW
+    t_coll = st["coll_bytes"] / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    from repro.configs import get_config
+    n_active = active_matmul_params(get_config(rep["arch"]))
+    toks = TOKENS[rep["shape"]]
+    mult = 6.0 if rep["kind"] == "train" else 2.0
+    model_flops = mult * n_active * toks / n_dev
+    bound = max(t_compute, t_memory, t_coll)
+    return dict(
+        arch=rep["arch"], shape=rep["shape"], mesh=rep["mesh"],
+        kind=rep["kind"],
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        dominant=dom[0], step_time_bound=bound,
+        model_flops=model_flops, hlo_flops=st["flops"],
+        useful_ratio=model_flops / max(st["flops"], 1e-30),
+        roofline_fraction=(model_flops / PEAK_FLOPS) / max(bound, 1e-30),
+        hbm_traffic_per_dev=traffic,
+        hbm_resident=_hbm_resident(rep),
+        fits_hbm=_hbm_resident(rep) <= HBM_PER_CHIP,
+    )
+
+
+def load_reports(dryrun_dir: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def all_terms(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for rep in load_reports(dryrun_dir):
+        t = terms(rep)
+        if t is not None:
+            rows.append(t)
+    return rows
+
+
+def run(report, dryrun_dir: str = "experiments/dryrun"):
+    rows = all_terms(dryrun_dir)
+    if not rows:
+        report("roofline", 0, "no dry-run reports yet")
+        return rows
+    for t in rows:
+        if t["mesh"] != "pod":
+            continue   # roofline table is single-pod per the contract
+        tag = f"{t['arch']}/{t['shape']}"
+        report(f"roofline_{tag}_bound_ms",
+               round(t["step_time_bound"] * 1e3, 3),
+               f"dom={t['dominant']} frac={t['roofline_fraction']:.3f} "
+               f"useful={t['useful_ratio']:.2f}")
+    return rows
+
+
+def write_csv(rows: List[Dict], path: str):
+    import csv
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)

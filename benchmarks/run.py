@@ -1,0 +1,36 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    # Table-1 live measurement + comm-volume need a 16-device host mesh.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import sys  # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# One function per paper table/figure. Prints ``name,value,derived`` CSV.
+from benchmarks import comm_volume, kernel_bench, roofline, table1_cannon  # noqa: E402
+
+
+def main() -> None:
+    print("name,value,derived")
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    # Paper Table 1: pure OpenCL vs hybrid OpenCL+OpenSHMEM (Cannon matmul)
+    table1_cannon.run(report)
+    # Framework-scale analogue: collective bytes per TP strategy
+    comm_volume.run(report)
+    # Kernel-level: chunked attention / SSD vs references, VMEM structure
+    kernel_bench.run(report)
+    # Roofline terms from the dry-run artifacts (if present)
+    rows = roofline.run(report)
+    if rows:
+        out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "roofline.csv")
+        roofline.write_csv(rows, out)
+        report("roofline_csv", len(rows), "experiments/roofline.csv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Static jaxpr cost analyzer: exact FLOPs / collective bytes per device.
+
+XLA's ``compiled.cost_analysis()`` visits each while-body once, so anything
+under ``lax.scan`` (our layer stack, the chunked attention/loss scans,
+microbatching) is undercounted by its trip count.  This walker traverses the
+closed jaxpr instead, multiplying scan lengths through, and prices:
+
+  * dot_general / ragged_dot  — 2*M*N*K MACs->FLOPs (batch dims folded in)
+  * elementwise / reductions  — 1 FLOP per output element (secondary term)
+  * collectives               — bytes-on-wire per participant:
+        all_gather:    (n-1)/n * result bytes
+        psum:          2*(n-1)/n * operand bytes   (reduce-scatter + gather)
+        psum_scatter:  (n-1)/n * operand bytes
+        all_to_all:    (n-1)/n * operand bytes
+        ppermute:      operand bytes               (point-to-point)
+  * eqn_bytes                 — sum of operand+result bytes x trips: an
+        UNFUSED upper bound on tensor traffic (reported for trend analysis,
+        not as the roofline memory term — XLA fuses aggressively).
+
+Because the walk recurses into shard_map bodies, all numbers are PER DEVICE
+of the mesh, which is exactly what the roofline terms want.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import core
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape) * jnp.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    m = np.prod([a.shape[i] for i in range(len(a.shape))
+                 if i not in tuple(lc) + tuple(lb)], initial=1)
+    k = np.prod([a.shape[i] for i in lc], initial=1)
+    n = np.prod([b.shape[i] for i in range(len(b.shape))
+                 if i not in tuple(rc) + tuple(rb)], initial=1)
+    batch = np.prod([a.shape[i] for i in lb], initial=1)
+    return float(2 * batch * m * n * k)
+
+
+def _ragged_dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval   # (M,K), (G,K,N)
+    return float(2 * a.shape[0] * a.shape[1] * b.shape[2])
+
+
+def _group_size(params, axis_sizes) -> int:
+    groups = params.get("axis_index_groups")
+    if groups is not None:
+        return len(groups[0])
+    n = 1
+    axes = params.get("axes") or params.get("axis_name")
+    if axes is None:
+        return 1
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    for ax in axes:
+        n *= axis_sizes.get(ax, 1)
+    return n
+
+
+class Cost:
+    def __init__(self):
+        self.flops = 0.0
+        self.coll_bytes = 0.0
+        self.eqn_bytes = 0.0
+        self.coll_by_type: Dict[str, float] = {}
+        self.coll_counts: Dict[str, float] = {}
+
+    def add_coll(self, kind: str, nbytes: float, trips: float):
+        self.coll_bytes += nbytes * trips
+        self.coll_by_type[kind] = self.coll_by_type.get(kind, 0.) + \
+            nbytes * trips
+        self.coll_counts[kind] = self.coll_counts.get(kind, 0.) + trips
+
+    def as_dict(self):
+        return dict(flops=self.flops, coll_bytes=self.coll_bytes,
+                    eqn_bytes=self.eqn_bytes,
+                    coll_by_type=self.coll_by_type,
+                    coll_counts=self.coll_counts)
+
+
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                  "body_jaxpr")
+
+
+def _walk(jaxpr, cost: Cost, trips: float, axis_sizes: Dict[str, int]):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+        cost.eqn_bytes += (out_bytes + in_bytes) * trips
+
+        if name == "dot_general":
+            cost.flops += _dot_flops(eqn) * trips
+        elif name == "ragged_dot":
+            cost.flops += _ragged_dot_flops(eqn) * trips
+        elif name == "scan":
+            length = eqn.params["length"]
+            inner = eqn.params["jaxpr"]
+            _walk(inner.jaxpr, cost, trips * length, axis_sizes)
+        elif name == "while":
+            # bounded whiles only appear via fori_loop in our code; treat as 1
+            _walk(eqn.params["body_jaxpr"].jaxpr, cost, trips, axis_sizes)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            sub = Cost()
+            for br in branches:
+                c2 = Cost()
+                _walk(br.jaxpr, c2, trips, axis_sizes)
+                if c2.flops > sub.flops:
+                    sub = c2
+            cost.flops += sub.flops
+            cost.coll_bytes += sub.coll_bytes
+            cost.eqn_bytes += sub.eqn_bytes
+        elif name == "psum":
+            n = _group_size(eqn.params, axis_sizes)
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            cost.add_coll("psum", 2 * (n - 1) / max(n, 1) * nbytes, trips)
+        elif name in ("all_gather",):
+            n = _group_size(eqn.params, axis_sizes)
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            cost.add_coll("all_gather", (n - 1) / max(n, 1) * nbytes, trips)
+        elif name in ("psum_scatter", "reduce_scatter"):
+            n = _group_size(eqn.params, axis_sizes)
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            cost.add_coll("reduce_scatter", (n - 1) / max(n, 1) * nbytes,
+                          trips)
+        elif name == "all_to_all":
+            n = _group_size(eqn.params, axis_sizes)
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            cost.add_coll("all_to_all", (n - 1) / max(n, 1) * nbytes, trips)
+        elif name == "ppermute":
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            cost.add_coll("ppermute", nbytes, trips)
+        elif name in ("pmax", "pmin"):
+            n = _group_size(eqn.params, axis_sizes)
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            cost.add_coll("psum", 2 * (n - 1) / max(n, 1) * nbytes, trips)
+        else:
+            handled = False
+            for key in _SUBJAXPR_KEYS:
+                if key in eqn.params:
+                    sub = eqn.params[key]
+                    inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                    if hasattr(inner, "eqns"):
+                        _walk(inner, cost, trips, axis_sizes)
+                        handled = True
+                        break
+            if not handled:
+                # elementwise-ish: 1 flop / output element (secondary)
+                if name not in ("broadcast_in_dim", "reshape", "transpose",
+                                "slice", "dynamic_slice",
+                                "dynamic_update_slice", "concatenate",
+                                "gather", "scatter", "scatter-add", "iota",
+                                "convert_element_type", "bitcast_convert_type",
+                                "squeeze", "pad", "copy", "select_n",
+                                "stop_gradient", "custom_jvp_generic",
+                                "split", "pjit"):
+                    cost.flops += (out_bytes / 4) * trips
+
+
+def analyze_fn(fn: Callable, *abstract_args, axis_sizes: Dict[str, int]
+               ) -> Dict[str, Any]:
+    """Trace fn to a jaxpr and roll up per-device costs."""
+    jaxpr = jax.make_jaxpr(fn)(*abstract_args)
+    cost = Cost()
+    _walk(jaxpr.jaxpr, cost, 1.0, axis_sizes)
+    return cost.as_dict()

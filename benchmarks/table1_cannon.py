@@ -1,0 +1,86 @@
+"""Paper Table 1 reproduction: Cannon matmul, pure-OpenCL vs hybrid model.
+
+Two artifacts:
+  1. The calibrated Epiphany-III analytical model (core/epiphany_model):
+     predicted MFLOPS for both programming models at n = 32/64/128 vs the
+     paper's numbers, plus the fitted hardware constants.
+  2. A live measurement of the SAME two communication structures in the JAX
+     port, on a 16-device host mesh: per-call wall time and — the invariant
+     that carries to TPU — bytes moved per memory tier (static analyzer).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.static_cost import analyze_fn
+from repro.core import cannon
+from repro.core.epiphany_model import PAPER_TABLE1, table1_report, volumes
+from repro.core.shmem import ShmemGrid
+
+
+def _bench(f, *args, iters=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(report):
+    rows, meta = table1_report()
+    for r in rows:
+        report(f"table1_model_n{r['n']}_opencl_MFLOPS", r["model_opencl"],
+               f"paper={r['paper_opencl']}")
+        report(f"table1_model_n{r['n']}_hybrid_MFLOPS", r["model_hybrid"],
+               f"paper={r['paper_hybrid']}")
+        report(f"table1_model_n{r['n']}_speedup", r["model_speedup"],
+               f"paper={r['paper_speedup']}")
+    report("table1_fit_offchip_MBs", meta["offchip_bw_MBs"],
+           f"max_rel_err={meta['max_rel_err']}")
+    report("table1_fit_eff_gflops", meta["eff_gflops"],
+           f"step_overhead_us={meta['step_overhead_us']}")
+
+    # Live JAX port on 16 host devices (needs the forced device count).
+    if len(jax.devices()) < 16:
+        report("table1_live", 0, "skipped: <16 devices")
+        return
+    mesh = jax.make_mesh((16,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,),
+                         devices=np.array(jax.devices()[:16]))
+    grid = ShmemGrid("model", 4, 4)
+    for n in (128, 512):
+        A = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+        B = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+        A_b = cannon.block_2d(A, 4, 4)
+        B_b = cannon.block_2d(B, 4, 4, skew_b=True)
+        B_n = cannon.block_2d(B, 4, 4)
+
+        def mk(fn, **kw):
+            def body(a, b):
+                return fn(grid, a[0], b[0], **kw)[None]
+            return jax.jit(jax.shard_map(
+                body, mesh=mesh, in_specs=(P("model"),) * 2,
+                out_specs=P("model"), check_vma=False))
+
+        f_hybrid = mk(cannon.cannon_matmul, preskewed_b=True)
+        f_opencl = mk(cannon.allgather_matmul)
+        t_h = _bench(f_hybrid, A_b, B_b)
+        t_o = _bench(f_opencl, A_b, B_n)
+        s_h = analyze_fn(f_hybrid, A_b, B_b, axis_sizes={"model": 16})
+        s_o = analyze_fn(f_opencl, A_b, B_n, axis_sizes={"model": 16})
+        report(f"live_n{n}_hybrid_us", round(t_h, 1),
+               f"coll_bytes={s_h['coll_bytes']:.0f}")
+        report(f"live_n{n}_opencl_us", round(t_o, 1),
+               f"coll_bytes={s_o['coll_bytes']:.0f}")
+        report(f"live_n{n}_bytes_ratio",
+               round(s_o["coll_bytes"] / max(s_h["coll_bytes"], 1), 2),
+               "allgather/cannon wire bytes")

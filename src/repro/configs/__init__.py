@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+One module per assigned architecture (exact numbers from the assignment
+table) + the shape set + dry-run input specs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import (jamba_1_5_large_398b, kimi_k2_1t_a32b,
+                           mamba2_780m, pixtral_12b, qwen2_0_5b, qwen2_7b,
+                           qwen3_0_6b, qwen3_moe_235b_a22b, stablelm_12b,
+                           whisper_base)
+from repro.configs.registry import reduced
+from repro.configs.shapes import SHAPE_BY_NAME, SHAPES, Shape, applicable
+from repro.models.config import ModelConfig
+
+REGISTRY: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen3_moe_235b_a22b, kimi_k2_1t_a32b, jamba_1_5_large_398b,
+              qwen3_0_6b, qwen2_0_5b, stablelm_12b, qwen2_7b, whisper_base,
+              mamba2_780m, pixtral_12b)
+}
+
+ARCH_NAMES = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return REGISTRY[name]

@@ -1,0 +1,13 @@
+"""Core library: the paper's hybrid OpenCL + OpenSHMEM model, JAX-native.
+
+  shmem          — device-level PGAS layer (ShmemGrid over a flat mesh axis)
+  cannon         — Cannon systolic distributed GEMM (the paper's technique)
+                   + allgather (pure-OpenCL analogue) + SUMMA + decode GEMV
+  hybrid         — OpenCL-style host offload API (HybridKernel/CommandQueue)
+  epiphany_model — analytical Epiphany-III model reproducing paper Table 1
+"""
+
+from repro.core.shmem import ShmemGrid, row_major_grid
+from repro.core.cannon import (
+    cannon_matmul, allgather_matmul, summa_matmul, gemv2d, block_2d, unblock_2d)
+from repro.core.hybrid import HybridKernel, CommandQueue, collective_bytes_from_hlo

@@ -1,0 +1,267 @@
+"""Distributed GEMM strategies on the SHMEM PE grid.
+
+This module is the paper's demonstration kernel, generalized into the
+framework's tensor-parallel GEMM layer.  All functions run INSIDE a shard_map
+body on per-PE blocks:
+
+  * :func:`cannon_matmul` — the paper's hybrid OpenCL+OpenSHMEM technique:
+    operands staged into PE-local memory once, then systolically shifted
+    between neighbor PEs (``shmem_put`` -> ``lax.ppermute``).  Data reuse:
+    each A/B block is read from "global" memory exactly once and visits q PEs
+    over the NoC/ICI.
+
+  * :func:`allgather_matmul` — the paper's pure-OpenCL baseline: every PE
+    (re-)fetches the full operand panels it needs from global memory each
+    call.  No inter-PE reuse; bandwidth-bound.
+
+  * :func:`summa_matmul` — beyond-paper comparison (broadcast-based 2D GEMM;
+    works on non-square grids).
+
+  * :func:`gemv2d` — small-M path (single-token decode): stationary 2D
+    weights, replicated activations, grid-transpose + row-psum.
+
+Block convention (row-major grid, PE = (i, j) = (pe // r, pe % r)):
+  A block at (i, j) = A[i-th M slice, j-th K slice]   (activations: M=tokens)
+  B block at (i, j) = B[i-th K slice, j-th N slice]   (weights)
+  C block at (i, j) = C[i-th M slice, j-th N slice]
+
+All ops accumulate in fp32 on the MXU (``preferred_element_type``) and cast
+back to the input dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.shmem import ShmemGrid
+
+
+def _mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Local block matmul, fp32 accumulation.  Contracts last dim of a with
+    first dim of b; supports leading batch dims on neither operand."""
+    return lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def cannon_matmul(
+    grid: ShmemGrid,
+    a_blk: jax.Array,   # (M_loc, K_loc) at (i, j): A[M_i, K_j]
+    b_blk: jax.Array,   # (K_loc, N_loc) at (i, j): B[K_i, N_j]
+    *,
+    preskewed_b: bool = False,
+    a_preskewed: bool = False,
+    overlap: bool = True,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Cannon's algorithm: C = A @ B on a q x q PE grid.
+
+    The initial skew aligns blocks so step s multiplies A[i, (i+j+s) % q] with
+    B[(i+j+s) % q, j]; after q multiply+shift rounds every K block has been
+    contracted.  The paper's optimization — "the initial skew communication may
+    be unnecessary if the submatrices are read in pre-skewed" — is exposed as
+    ``preskewed_b``: weight blocks are *stored* skewed at parameter-build time,
+    removing one full-weight ppermute per call (weights are by far the larger
+    operand in LM layers).
+
+    With ``overlap=True`` the next shift is issued before the current block
+    multiply consumes it, letting XLA's async collective scheduler overlap
+    ICI transfer with MXU compute (the TPU analogue of the Epiphany DMA
+    engine double-buffering the paper notes neither standard could express).
+    """
+    q, r = grid.q, grid.r
+    assert q == r, f"Cannon requires a square grid, got {q}x{r} (use summa_matmul)"
+    out_dtype = out_dtype or a_blk.dtype
+
+    # Initial skew: A row i shifted left by i; B col j shifted up by j.
+    # ``a_preskewed``: the activation already lives in the skewed layout
+    # (the cannon_opt alternating scheme keeps the residual stream skewed),
+    # so the A-skew ppermute vanishes entirely.
+    a = a_blk if a_preskewed else grid.put(a_blk, grid.skew_a_pairs())
+    b = b_blk if preskewed_b else grid.put(b_blk, grid.skew_b_pairs())
+
+    acc = jnp.zeros(a_blk.shape[:-1] + (b_blk.shape[-1],), jnp.float32)
+    for s in range(q):
+        if overlap and s < q - 1:
+            a_nxt = grid.shift_cols(a, 1)   # A left by one
+            b_nxt = grid.shift_rows(b, 1)   # B up by one
+            acc = acc + _mm(a, b)
+            a, b = a_nxt, b_nxt
+        else:
+            acc = acc + _mm(a, b)
+            if s < q - 1:
+                a = grid.shift_cols(a, 1)
+                b = grid.shift_rows(b, 1)
+    return acc.astype(out_dtype)
+
+
+def cannon_matmul_crot(
+    grid: ShmemGrid,
+    a_blk: jax.Array,   # (M_loc, K_loc) at (i, j): A[M_i, K_j]  NATURAL
+    b_blk: jax.Array,   # crot-stored: at (i, j): B[K_j, N_{(i+j+1)%q}]
+    *,
+    overlap: bool = True,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """C-rotating Cannon: A STATIONARY, the accumulator rotates instead.
+
+    The beyond-paper optimization (EXPERIMENTS.md §Perf): when the output is
+    token-shaped and smaller than the input (down-projections, out-proj),
+    rotating C instead of A moves N-sized instead of K-sized token blocks —
+    and the output lands exactly in the skew_a arrangement, i.e. PRE-SKEWED
+    for the next A-rotating GEMM.  Alternating arot/crot GEMMs through the
+    layer keeps the residual stream permanently skewed and eliminates every
+    initial-skew ppermute.
+
+    Per step s the resident accumulator at PE (i, j) targets column block
+    N_{(i+j+s+1)%q}; it collects the k = j contribution here, then travels
+    left while B travels up.  q-1 shifts each for B and C; ZERO for A.
+    """
+    q, r = grid.q, grid.r
+    assert q == r, "crot requires a square grid"
+    out_dtype = out_dtype or a_blk.dtype
+    a = a_blk
+    b = b_blk
+    # The travelling accumulator is shifted in the COMPUTE dtype (bf16 in
+    # production configs): same wire cost per element as the arot operands.
+    # Equivalent numerics to a bf16 ring reduce-scatter (per-hop rounding).
+    acc = jnp.zeros(a_blk.shape[:-1] + (b_blk.shape[-1],), a_blk.dtype)
+    for s in range(q):
+        if overlap and s < q - 1:
+            b_nxt = grid.shift_rows(b, 1)          # N index +1 (from row i+1)
+            acc = (acc.astype(jnp.float32) + _mm(a, b)).astype(a_blk.dtype)
+            acc = grid.shift_cols(acc, 1)          # accumulator moves left
+            b = b_nxt
+        else:
+            acc = (acc.astype(jnp.float32) + _mm(a, b)).astype(a_blk.dtype)
+            if s < q - 1:
+                acc = grid.shift_cols(acc, 1)
+                b = grid.shift_rows(b, 1)
+    return acc.astype(out_dtype)   # C at (i,j) = C[M_i, N_{(i+j)%q}] (skewed)
+
+
+def allgather_matmul(
+    grid: ShmemGrid,
+    a_blk: jax.Array,
+    b_blk: jax.Array,
+    *,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Paper's pure-OpenCL baseline: fetch full panels from global memory.
+
+    Every call all-gathers the A panel across the grid row and the FULL B
+    panel (the weights) across the grid column — i.e. operands are re-read
+    end-to-end on every GEMM, with no inter-PE reuse.  Same output layout as
+    :func:`cannon_matmul`; strictly more bytes on the wire (the B panel gather
+    dominates: weights >> activations for LM layers).
+    """
+    out_dtype = out_dtype or a_blk.dtype
+    a_panel = grid.all_gather_cols(a_blk, axis=a_blk.ndim - 1)   # (M_loc, K)
+    b_panel = grid.all_gather_rows(b_blk, axis=0)                # (K, N_loc)
+    return _mm(a_panel, b_panel).astype(out_dtype)
+
+
+def summa_matmul(
+    grid: ShmemGrid,
+    a_blk: jax.Array,
+    b_blk: jax.Array,
+    *,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """SUMMA: per K-block, broadcast A's column panel along rows and B's row
+    panel along columns, accumulate.  Beyond-paper reference point: same
+    O(1/q) per-PE comm scaling as Cannon, but broadcast- instead of
+    shift-based (no skew, works for q != r grids when K blocks = lcm)."""
+    q, r = grid.q, grid.r
+    assert q == r, "summa here assumes square grids for K-block alignment"
+    out_dtype = out_dtype or a_blk.dtype
+    i, j = grid.my_coords()
+    acc = jnp.zeros(a_blk.shape[:-1] + (b_blk.shape[-1],), jnp.float32)
+    for s in range(q):
+        # Broadcast along each row the A block held by col s (mask + row psum),
+        # and along each col the B block held by row s.
+        a_s = grid.psum_cols(a_blk * (j == s).astype(a_blk.dtype))
+        b_s = grid.psum_rows(b_blk * (i == s).astype(b_blk.dtype))
+        acc = acc + _mm(a_s, b_s)
+    return acc.astype(out_dtype)
+
+
+def gemv2d(
+    grid: ShmemGrid,
+    x_vec: jax.Array,   # (M, K_loc) at (i, j): x[:, K_j]; replicated over rows
+    b_blk: jax.Array,   # (K_loc, N_loc) at (i, j): B[K_i, N_j]
+    *,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Small-M GEMM against stationary 2D-blocked weights (decode path).
+
+    Input x carries features sharded over grid COLS (my), replicated over
+    rows.  A grid-transpose ppermute moves the feature shard onto rows to
+    match B's K blocking, then each PE computes a partial and the row-psum
+    contracts K.  Output: (M, N_loc) with N over cols, replicated over rows —
+    the same layout family as the input, so calls chain.  Communication is
+    O(M * K / q + M * N) for tiny M — far cheaper than re-sharding M.
+    """
+    out_dtype = out_dtype or x_vec.dtype
+    x_t = grid.put(x_vec, grid.transpose_pairs())    # features now over rows
+    partial = _mm(x_t, b_blk)                        # (M, N_loc), partial over K_i
+    return grid.psum_rows(partial).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Weight-block utilities (build/skew at parameter time).
+# ---------------------------------------------------------------------------
+
+def _block_index(i: int, j: int, q: int, skew) -> tuple:
+    """(K-block, N-block) stored at PE (i, j) for a storage mode.
+
+    skew=False : (i, j)            natural
+    skew=True  : ((i+j)%q, j)      Cannon pre-skew (A-rotating GEMMs)
+    skew="crot": (j, (i+j+1)%q)    C-rotating stationary-A storage
+    """
+    if skew == "crot":
+        return j, (i + j + 1) % q
+    if skew:
+        return (i + j) % q, j
+    return i, j
+
+
+def block_2d(w: jax.Array, q: int, r: int, skew_b=False) -> jax.Array:
+    """Split a global (K, N) weight into row-major PE blocks (see
+    :func:`_block_index` for the three storage modes)."""
+    K, N = w.shape
+    kb, nb = K // q, N // r
+    assert kb * q == K and nb * r == N, f"{w.shape} not divisible by {q}x{r}"
+    blocks = []
+    for i in range(q):
+        for j in range(r):
+            ki, nj = _block_index(i, j, q, skew_b)
+            blocks.append(w[ki * kb:(ki + 1) * kb, nb * nj:nb * (nj + 1)])
+    return jnp.stack(blocks)
+
+
+def unblock_2d(blocks: jax.Array, q: int, r: int, skew_b=False) -> jax.Array:
+    """Inverse of :func:`block_2d` (used by checkpoint export / tests)."""
+    nb_, kb, cb = blocks.shape
+    assert nb_ == q * r
+    K, N = kb * q, cb * r
+    out = jnp.zeros((K, N), blocks.dtype)
+    for i in range(q):
+        for j in range(r):
+            ki, nj = _block_index(i, j, q, skew_b)
+            out = out.at[ki * kb:(ki + 1) * kb, cb * nj:cb * (nj + 1)].set(
+                blocks[i * r + j])
+    return out
+
+
+def unskew_activation(grid: ShmemGrid, x: jax.Array) -> jax.Array:
+    """Skewed residual layout -> natural blocked layout (one ppermute)."""
+    return grid.put(x, grid.unskew_a_pairs())
+
+
+def skew_activation(grid: ShmemGrid, x: jax.Array) -> jax.Array:
+    return grid.put(x, grid.skew_a_pairs())

@@ -1,0 +1,240 @@
+"""Device-level OpenSHMEM-style PGAS layer over a flat mesh axis.
+
+This is the JAX realization of the paper's central object: an OpenSHMEM parallel
+job *nested inside* an offloaded kernel.  The enclosing ``shard_map`` body is the
+"OpenCL kernel"; within it, a :class:`ShmemGrid` provides the OpenSHMEM view:
+
+  * PEs are numbered flat along one mesh axis (``my_pe`` = ``lax.axis_index``),
+    exactly like OpenSHMEM's ``shmem_my_pe()``.
+  * Any grid structure (Cannon's 4x4) is index arithmetic over the flat PE id —
+    the same ``row = pe // r, col = pe % r`` the paper's kernels perform.
+  * ``put``/neighbor ``shift``s lower to ``lax.ppermute`` (XLA collective-permute,
+    i.e. point-to-point NoC/ICI traffic, NOT an all-reduce).
+  * The symmetric heap is implicit: every PE executes the same program on
+    identically-shaped local arrays, so any local array is a symmetric object.
+  * ``barrier_all`` is a documented no-op: XLA SPMD collectives synchronize by
+    data dependence.  ``opt_barrier`` is provided to pin scheduling where the
+    paper's code would rely on a barrier for performance reasons.
+
+Everything here is differentiable (ppermute/psum/all_gather have transpose
+rules), so the same SHMEM program is used for training and serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class ShmemGrid:
+    """A logical ``q x r`` PE grid embedded in the flat mesh axis ``axis``.
+
+    Row-major embedding: ``pe = i * r + j`` with ``i`` the grid row (``mx``,
+    shards the token/seq dim) and ``j`` the grid col (``my``, shards the
+    feature dim).
+    """
+
+    axis: str
+    q: int  # rows (mx)
+    r: int  # cols (my)
+
+    # -- identity ---------------------------------------------------------
+    @property
+    def n_pes(self) -> int:
+        return self.q * self.r
+
+    def my_pe(self) -> jax.Array:
+        return lax.axis_index(self.axis)
+
+    def my_coords(self) -> Tuple[jax.Array, jax.Array]:
+        pe = self.my_pe()
+        return pe // self.r, pe % self.r
+
+    # -- permutation builders (static python ints; OpenSHMEM-style PE math)
+    def _pairs(self, dst_of_src) -> List[Tuple[int, int]]:
+        return [(pe, int(dst_of_src(pe))) for pe in range(self.n_pes)]
+
+    def row_shift_pairs(self, amount: int) -> List[Tuple[int, int]]:
+        """Cyclic shift along grid rows: data at (i, j) moves to (i - amount mod q, j).
+
+        ``amount``=+1 is Cannon's "shift B up by one": PE (i, j) receives the
+        block previously held by (i+1, j).
+        """
+
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return ((i - amount) % self.q) * self.r + j
+
+        return self._pairs(dst)
+
+    def col_shift_pairs(self, amount: int) -> List[Tuple[int, int]]:
+        """Cyclic shift along grid cols: data at (i, j) moves to (i, j - amount mod r).
+
+        ``amount``=+1 is Cannon's "shift A left by one".
+        """
+
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return i * self.r + ((j - amount) % self.r)
+
+        return self._pairs(dst)
+
+    def skew_a_pairs(self) -> List[Tuple[int, int]]:
+        """Cannon initial skew of A: block (i, j) -> (i, j - i)  (row i left by i)."""
+
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return i * self.r + ((j - i) % self.r)
+
+        return self._pairs(dst)
+
+    def skew_b_pairs(self) -> List[Tuple[int, int]]:
+        """Cannon initial skew of B: block (i, j) -> (i - j, j)  (col j up by j)."""
+
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return ((i - j) % self.q) * self.r + j
+
+        return self._pairs(dst)
+
+    def unskew_a_pairs(self) -> List[Tuple[int, int]]:
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return i * self.r + ((j + i) % self.r)
+
+        return self._pairs(dst)
+
+    def unskew_b_pairs(self) -> List[Tuple[int, int]]:
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return ((i + j) % self.q) * self.r + j
+
+        return self._pairs(dst)
+
+    def transpose_pairs(self) -> List[Tuple[int, int]]:
+        """Grid transpose: block (i, j) -> (j, i).  Requires q == r."""
+        assert self.q == self.r
+
+        def dst(pe):
+            i, j = divmod(pe, self.r)
+            return j * self.r + i
+
+        return self._pairs(dst)
+
+    # -- one-sided communication (shmem_put analogues) ---------------------
+    def put(self, x: jax.Array, pairs: Sequence[Tuple[int, int]]) -> jax.Array:
+        """``shmem_put`` of the whole local buffer along an arbitrary permutation.
+
+        Lowers to a single XLA collective-permute over the ICI links — the
+        direct analogue of an eMesh NoC write on Epiphany.
+        """
+        return lax.ppermute(x, self.axis, list(pairs))
+
+    def shift_rows(self, x: jax.Array, amount: int = 1) -> jax.Array:
+        return self.put(x, self.row_shift_pairs(amount))
+
+    def shift_cols(self, x: jax.Array, amount: int = 1) -> jax.Array:
+        return self.put(x, self.col_shift_pairs(amount))
+
+    # -- collectives over grid sub-axes ------------------------------------
+    # The flat axis has no named sub-axes, so row/col collectives are built
+    # from flat-axis primitives with PE-arithmetic masks/permutations.
+
+    def psum_cols(self, x: jax.Array) -> jax.Array:
+        """Sum over the grid-col (my / feature) dimension: result replicated
+        across each row's r PEs.  Implemented as segmented psum: all_reduce over
+        the flat axis restricted to same-row PEs via axis_index_groups."""
+        groups = [[i * self.r + j for j in range(self.r)] for i in range(self.q)]
+        return lax.psum(x, self.axis, axis_index_groups=groups)
+
+    def psum_rows(self, x: jax.Array) -> jax.Array:
+        """Sum over the grid-row (mx / seq) dimension."""
+        groups = [[i * self.r + j for i in range(self.q)] for j in range(self.r)]
+        return lax.psum(x, self.axis, axis_index_groups=groups)
+
+    def pmax_cols(self, x: jax.Array) -> jax.Array:
+        groups = [[i * self.r + j for j in range(self.r)] for i in range(self.q)]
+        return lax.pmax(x, self.axis, axis_index_groups=groups)
+
+    def pmax_cols_sg(self, x: jax.Array) -> jax.Array:
+        """pmax over grid cols with a zero tangent (pmax has no JVP rule;
+        softmax max-shifts are gradient-neutral anyway)."""
+        groups = [[i * self.r + j for j in range(self.r)] for i in range(self.q)]
+
+        @jax.custom_jvp
+        def f(v):
+            return lax.pmax(v, self.axis, axis_index_groups=groups)
+
+        @f.defjvp
+        def _jvp(primals, tangents):
+            (v,) = primals
+            return f(v), jnp.zeros_like(v)
+
+        return f(x)
+
+    def psum_all(self, x: jax.Array) -> jax.Array:
+        return lax.psum(x, self.axis)
+
+    def all_gather_rows(self, x: jax.Array, axis: int = 0, tiled: bool = True) -> jax.Array:
+        """fcollect over the grid-row (mx) dimension: concatenates the q blocks
+        held along a column (e.g. gathering all seq shards of K/V)."""
+        groups = [[i * self.r + j for i in range(self.q)] for j in range(self.r)]
+        return lax.all_gather(x, self.axis, axis_index_groups=groups, axis=axis,
+                              tiled=tiled)
+
+    def all_gather_cols(self, x: jax.Array, axis: int = 0, tiled: bool = True) -> jax.Array:
+        groups = [[i * self.r + j for j in range(self.r)] for i in range(self.q)]
+        return lax.all_gather(x, self.axis, axis_index_groups=groups, axis=axis,
+                              tiled=tiled)
+
+    def all_gather_flat(self, x: jax.Array, axis: int = 0, tiled: bool = True) -> jax.Array:
+        return lax.all_gather(x, self.axis, axis=axis, tiled=tiled)
+
+    def reduce_scatter_rows(self, x: jax.Array, axis: int = 0) -> jax.Array:
+        groups = [[i * self.r + j for i in range(self.q)] for j in range(self.r)]
+        return lax.psum_scatter(x, self.axis, axis_index_groups=groups,
+                                scatter_dimension=axis, tiled=True)
+
+    def reduce_scatter_cols(self, x: jax.Array, axis: int = 0) -> jax.Array:
+        groups = [[i * self.r + j for j in range(self.r)] for i in range(self.q)]
+        return lax.psum_scatter(x, self.axis, axis_index_groups=groups,
+                                scatter_dimension=axis, tiled=True)
+
+    def all_to_all_rows(self, x: jax.Array, split_axis: int, concat_axis: int) -> jax.Array:
+        """MoE dispatch/combine exchange along the grid-row (mx) dimension."""
+        groups = [[i * self.r + j for i in range(self.q)] for j in range(self.r)]
+        return lax.all_to_all(x, self.axis, split_axis=split_axis,
+                              concat_axis=concat_axis, axis_index_groups=groups,
+                              tiled=True)
+
+    # -- synchronization ----------------------------------------------------
+    def barrier_all(self, *arrays):
+        """OpenSHMEM ``shmem_barrier_all``.
+
+        XLA SPMD programs synchronize through collective data dependence; an
+        explicit barrier op does not exist (and is not needed for correctness
+        — every ``put`` above is a collective that already rendezvouses).  For
+        API fidelity this optionally pins scheduling via optimization_barrier.
+        """
+        if not arrays:
+            return None
+        out = lax.optimization_barrier(arrays)
+        return out[0] if len(arrays) == 1 else out
+
+    def broadcast_from(self, x: jax.Array, root: int) -> jax.Array:
+        """shmem_broadcast from flat PE ``root`` to all PEs."""
+        pairs = [(root, pe) for pe in range(self.n_pes)]
+        # ppermute requires a permutation (each dst once); broadcast is done as
+        # select + psum instead (cheap for small x) to stay a single collective.
+        mask = (self.my_pe() == root).astype(x.dtype)
+        return self.psum_all(x * mask)
+
+
+def row_major_grid(axis: str, q: int, r: Optional[int] = None) -> ShmemGrid:
+    return ShmemGrid(axis=axis, q=q, r=r if r is not None else q)

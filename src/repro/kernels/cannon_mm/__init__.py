@@ -1,0 +1,2 @@
+from repro.kernels.cannon_mm.ops import blocked_matmul
+from repro.kernels.cannon_mm.ref import matmul_ref

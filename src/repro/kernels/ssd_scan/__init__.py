@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_scan, ssd_decode_step
+from repro.kernels.ssd_scan.ref import ssd_ref

@@ -1,0 +1,138 @@
+"""Pallas TPU kernels for the Mamba2 SSD chunked scan.
+
+The SSD ("state-space dual") form splits the sequence into chunks of length L
+and computes, per chunk, (a) the intra-chunk output via an attention-like
+masked matmul and (b) the chunk's contribution to the running state — both
+dense MXU work over VMEM-resident tiles.  The only sequential dependence left
+is a tiny per-chunk affine recurrence over (H, N, P) states, which ops.py
+runs as an associative scan (and, across SHMEM grid rows, as a ppermute
+affine exchange — see models/ssm.py).
+
+Two kernels:
+  pass 1 ``_chunk_kernel``: x,dt,B,C -> y_intra, chunk_state, cumexp
+  pass 2 ``_apply_kernel``: y_intra, C, cumexp, state_in -> y
+
+Grid: (batch, n_chunks); each grid cell owns one (L, H, P) chunk in VMEM.
+Within-chunk cumulative decays use cumsum in log space; all decay exponents
+are <= 0 by construction (A < 0, dt > 0), so exp() never overflows.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                  y_ref, state_ref, cumexp_ref, *, rep: int):
+    x = x_ref[0, 0].astype(jnp.float32)       # (L, H, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (L, H)
+    A = a_ref[...].astype(jnp.float32)        # (H,)
+    Bm = b_ref[0, 0].astype(jnp.float32)      # (L, G, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)      # (L, G, N)
+
+    dtA = dt * A[None, :]                     # (L, H), <= 0
+    cum = jnp.cumsum(dtA, axis=0)             # (L, H)
+    cumexp_ref[0, 0] = cum_e = jnp.exp(cum)
+
+    # Intra-chunk: y[t] = sum_{s<=t} (C_t . B_s) * exp(cum_t - cum_s) * dt_s * x_s
+    scores = jnp.einsum("tgn,sgn->gts", Cm, Bm)             # (G, L, L)
+    scores = jnp.repeat(scores, rep, axis=0)                # (H, L, L)
+    L = x.shape[0]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # decay[h, t, s] = exp(cum[t,h] - cum[s,h]) for t >= s else 0; clamp
+    # masked entries before exp (they are positive and would overflow).
+    ldecay = cum.T[:, :, None] - cum.T[:, None, :]          # (H, L, L)
+    mask = (t_idx >= s_idx)[None]
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, ldecay, -60.0)), 0.0)
+    w = scores * decay * dt.T[:, None, :]                   # (H, L, L)
+    y_ref[0, 0] = jnp.einsum("hts,shp->thp", w, x).astype(y_ref.dtype)
+
+    # Chunk state: state[h,n,p] = sum_s exp(cum_last - cum_s) * dt_s * B_s (x) x_s
+    sdecay = jnp.exp(cum[-1][None, :] - cum) * dt           # (L, H)
+    b_h = jnp.repeat(Bm, rep, axis=1)                       # (L, H, N)
+    state_ref[0, 0] = jnp.einsum(
+        "lh,lhn,lhp->hnp", sdecay, b_h, x).astype(state_ref.dtype)
+
+
+def _apply_kernel(y_ref, c_ref, cumexp_ref, sin_ref, o_ref, *, rep: int):
+    y = y_ref[0, 0].astype(jnp.float32)           # (L, H, P)
+    Cm = c_ref[0, 0].astype(jnp.float32)          # (L, G, N)
+    ce = cumexp_ref[0, 0].astype(jnp.float32)     # (L, H)
+    sin = sin_ref[0, 0].astype(jnp.float32)       # (H, N, P)
+    c_h = jnp.repeat(Cm, rep, axis=1)             # (L, H, N)
+    y_inter = jnp.einsum("lhn,hnp->lhp", c_h, sin) * ce[..., None]
+    o_ref[0, 0] = (y + y_inter).astype(o_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, A, Bm, Cm, *, chunk: int, interpret: bool = False
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pass 1 over all chunks.  x (B,S,H,P) -> (y_intra, chunk_states, cumexp)
+    with chunk_states (B, nc, H, N, P) and cumexp (B, nc, L, H)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = chunk
+    assert S % L == 0
+    nc = S // L
+    rep = H // G
+    xr = x.reshape(B, nc, L, H, P)
+    dtr = dt.reshape(B, nc, L, H)
+    br = Bm.reshape(B, nc, L, G, N)
+    cr = Cm.reshape(B, nc, L, G, N)
+
+    kernel = functools.partial(_chunk_kernel, rep=rep)
+    y, states, cumexp = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, H), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, 1, L, G, N), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, G, N), lambda b, c: (b, c, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, H, N, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, H), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, L, H), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xr, dtr, A, br, cr)
+    return y, states, cumexp
+
+
+def ssd_apply_pallas(y_intra, Cm, cumexp, states_in, *, interpret: bool = False
+                     ) -> jax.Array:
+    """Pass 2: add each chunk's contribution from the incoming state."""
+    B, nc, L, H, P = y_intra.shape
+    G, N = Cm.shape[3], Cm.shape[4]
+    rep = H // G
+    kernel = functools.partial(_apply_kernel, rep=rep)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, G, N), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, H), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, H, N, P), lambda b, c: (b, c, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, H, P), lambda b, c: (b, c, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, L, H, P), y_intra.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(y_intra, Cm.reshape(B, nc, L, G, N), cumexp, states_in)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: exact sequential recurrence.
+
+State space:  s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t (x) x_t
+Output:       y_t = C_t . s_t
+
+Shapes: x (B, S, H, P), dt (B, S, H) [post-softplus, >0], A (H,) [negative],
+B/C (B, S, G, N) with G groups broadcast over H (GQA-style), state (B, H, N, P).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, init_state: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs          # (B,H,P), (B,H), (B,G,N), (B,G,N)
+        dA = jnp.exp(dtt * A32)           # (B,H)
+        bt_h = jnp.repeat(bt, rep, axis=1)     # (B,H,N)
+        ct_h = jnp.repeat(ct, rep, axis=1)
+        state = (dA[:, :, None, None] * state
+                 + (dtt[:, :, None] * bt_h)[..., None] * xt[:, :, None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", ct_h, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt32, 1, 0),
+          jnp.moveaxis(B32, 1, 0), jnp.moveaxis(C32, 1, 0))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)     # (B,S,H,P)
+    return y, final

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init.  Everything below is ordinary.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_NAMES, get_config                 # noqa: E402
+from repro.configs.shapes import SHAPES, SHAPE_BY_NAME, applicable  # noqa: E402
+from repro.core.hybrid import collective_bytes_from_hlo          # noqa: E402
+from repro.launch import specs as sp                             # noqa: E402
+from repro.launch.mesh import make_production_mesh, production_plan  # noqa: E402
+from repro.models import params as pm                            # noqa: E402
+from repro.models.transformer import param_specs                 # noqa: E402
+from repro.optim.adamw import AdamWConfig                        # noqa: E402
+from repro.serve.decode import (cache_specs, make_decode_step,   # noqa: E402
+                                make_prefill)
+from repro.train.step import make_train_step                     # noqa: E402
+
+import sys                                                        # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                "..", "..", ".."))
+from benchmarks.static_cost import analyze_fn                     # noqa: E402
+
+# TPU v5e-ish hardware constants for the roofline terms (see EXPERIMENTS.md).
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link (per-chip effective for the terms)
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+        c = c[0] if isinstance(c, (list, tuple)) else c
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+        return {k: float(getattr(m, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes") if hasattr(m, k)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               strategy: str = "cannon", grad_compress: bool = False,
+               moe_int8: bool = False, decode_mode: str = None):
+    """Build + lower + compile one (arch x shape x mesh) cell.  Returns the
+    report dict (raises on lowering/compile failure — those are bugs)."""
+    cfg = get_config(arch)
+    if moe_int8:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_wire_dtype="int8")
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = production_plan(mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step, specs, pctx = make_train_step(
+            cfg, mesh, plan, opt_cfg=AdamWConfig(), tp_strategy=strategy,
+            remat=True, donate=False, grad_compress=grad_compress,
+            extra_batch_keys=tuple(
+                k for k in ("frames", "patches")
+                if k in sp.train_batch_specs(cfg, shape)))
+        opt_abs = sp.abstract_opt_state(specs, AdamWConfig())
+        if grad_compress:
+            opt_abs["resid"] = jax.tree.map(
+                lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.bfloat16),
+                pm.abstract_params(specs))
+        args = (pm.abstract_params(specs), opt_abs,
+                sp.train_batch_specs(cfg, shape))
+    elif shape.kind == "prefill":
+        step, specs, pctx = make_prefill(
+            cfg, mesh, plan, tp_strategy=strategy,
+            extra_batch_keys=tuple(
+                k for k in ("frames", "patches")
+                if k in sp.prefill_batch_specs(cfg, shape)))
+        args = (pm.abstract_params(specs),
+                sp.prefill_batch_specs(cfg, shape))
+    else:
+        mode = decode_mode or sp.decode_mode(shape)
+        step, specs, pctx = make_decode_step(
+            cfg, mesh, plan, batch=shape.global_batch, s_max=shape.seq_len,
+            mode=mode)
+        args = (pm.abstract_params(specs),
+                cache_specs(cfg, plan, shape.global_batch, shape.seq_len,
+                            mode),
+                sp.decode_token_specs(cfg, shape),
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    axis_sizes = dict(zip(plan.axis_names, plan.axis_sizes))
+    static = analyze_fn(step, *args, axis_sizes=axis_sizes)
+
+    lowered = step.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "strategy": strategy, "status": "ok",
+        "n_devices": plan.n_devices,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost": _cost_dict(compiled),
+        "memory": _memory_dict(compiled),
+        "static": static,           # jaxpr walker: scan-corrected, per device
+        "collective_bytes_hlo": collective_bytes_from_hlo(hlo),
+        "collective_ops": _collective_counts(hlo),
+        "param_bytes_stored": float(_param_bytes(specs)),
+    }
+    del compiled, lowered, step
+    return report
+
+
+def _param_bytes(specs):
+    import numpy as np
+    tot = 0
+    for s in jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, pm.ParamSpec)):
+        tot += int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+    return tot
+
+
+def _collective_counts(hlo: str):
+    out = {}
+    for op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"):
+        out[op] = len(re.findall(rf"\b{op}(?:-start)?\(", hlo)) + \
+            len(re.findall(rf"= \S+ {op}\b", hlo))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--strategy", default="cannon",
+                    choices=["cannon", "cannon_opt", "allgather", "summa"])
+    ap.add_argument("--decode-mode", default=None, choices=["gemv"])
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--moe-int8", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape.name, mp))
+    else:
+        assert args.arch and args.shape
+        mps = {"pod": [False], "multipod": [True],
+               "both": [False, True]}[args.mesh]
+        cells = [(args.arch, args.shape, mp) for mp in mps]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multipod' if mp else 'pod'}"
+        if args.strategy != "cannon":
+            tag += f"__{args.strategy}"
+        if args.grad_compress:
+            tag += "__gc"
+        if args.moe_int8:
+            tag += "__int8a2a"
+        if args.decode_mode:
+            tag += f"__{args.decode_mode}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.all and os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        try:
+            rep = lower_cell(arch, shape, mp, args.strategy,
+                             args.grad_compress, args.moe_int8,
+                             args.decode_mode)
+        except Exception as e:
+            rep = {"arch": arch, "shape": shape,
+                   "mesh": "multipod" if mp else "pod",
+                   "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rep, f, indent=1)
+        status = rep["status"]
+        extra = ""
+        if status == "ok":
+            fl = rep["static"]["flops"]
+            extra = (f" flops/dev={fl:.3g}"
+                     f" coll={rep['static']['coll_bytes']:.3g}B"
+                     f" compile={rep['compile_s']}s")
+        print(f"[{status}] {tag}{extra}", flush=True)
+        jax.clear_caches()
+    if failures:
+        raise SystemExit(f"{failures} cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction (prescribed launch contract).
+
+``make_production_mesh`` is a FUNCTION — importing this module never touches
+jax device state.  Single-pod: (16, 16) = (data, model), 256 chips.
+Multi-pod: (2, 16, 16) = (pod, data, model), 512 chips.  The model axis is
+flat; the SHMEM library treats it as a logical 4x4 PE grid by index
+arithmetic (repro.core.shmem), exactly as OpenSHMEM programs treat their
+flat PE space.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.partition import DATA, MODEL, POD, MeshPlan, plan_for_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) != n:
+        assert len(devices) >= n, (
+            f"need {n} devices, have {len(devices)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+        devices = np.array(devices[:n]).reshape(shape)
+        from jax.sharding import Mesh
+        return Mesh(devices, axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 1):
+    """16-PE model mesh (+ optional data axis) for CPU smoke/equivalence."""
+    return jax.make_mesh((data, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def production_plan(mesh, pp_stages: int = 1) -> MeshPlan:
+    return plan_for_mesh(mesh, grid_q=4, pp_stages=pp_stages)

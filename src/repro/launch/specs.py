@@ -1,0 +1,62 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Modality frontends are stubs per the assignment: whisper
+gets precomputed frame embeddings, pixtral precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import Shape
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, MomentState
+from repro.partition import MeshPlan
+
+
+def train_batch_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.enc_layers:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.vis_patches:
+        # patches occupy the first vis_patches positions of the S total
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vis_patches, cfg.d_model), jnp.float32)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    del specs["labels"]
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: Shape) -> Any:
+    return jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+
+def abstract_opt_state(specs, opt_cfg: AdamWConfig):
+    """ShapeDtypeStructs mirroring optim.init_state (32-bit moments)."""
+    assert opt_cfg.state_bits == 32, "dry-run lowers the fp32-state optimizer"
+
+    def mom(s: pm.ParamSpec):
+        return MomentState(jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                           None, None)
+
+    leaves = jax.tree.map(mom, specs,
+                          is_leaf=lambda x: isinstance(x, pm.ParamSpec))
+    return dict(step=jax.ShapeDtypeStruct((), jnp.int32), m=leaves, v=leaves)
+
+
+def decode_mode(shape: Shape) -> str:
+    return "longctx" if shape.kind == "long_decode" else "batched"

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, attn_static
+from repro.models.transformer import forward, loss_fn, param_specs

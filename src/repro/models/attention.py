@@ -1,0 +1,203 @@
+"""Attention on the SHMEM grid: GQA + RoPE + context-parallel flash attention.
+
+Layout (train/prefill): x (B_loc, S_loc, D_loc) with the sequence sharded
+over grid rows and features/heads over grid cols.  Q/K/V projections are one
+fused distributed GEMM; K/V (small under GQA) are then ``fcollect``ed along
+grid rows so every PE attends its local query block against the full
+sequence — the SHMEM exchange replacing what OpenCL alone cannot express.
+
+``chunked_attention`` is a pure-jnp flash attention (lax.scan over KV blocks,
+running max/denominator): differentiable, O(S * block) memory, and accepts a
+*traced* q_offset (the PE's row index decides its global query positions).
+The Pallas kernel (repro.kernels.flash_attention) is the single-device
+serving fast path; both are tested against the same oracle.
+
+Decode paths:
+  * batched  — batch sharded over (data, grid rows): KV cache fully local,
+               attention needs no communication at all.
+  * longctx  — batch too small to shard: KV cache sequence-sharded over grid
+               rows (+ optionally data); each PE computes a partial softmax
+               over its cache chunk and partials merge with a log-sum-exp
+               psum (flash-decoding as a SHMEM reduction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (ParallelContext, apply_rope, col_slice,
+                                 dense, fused_dense, rms_norm_local,
+                                 rope_tables)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Differentiable chunked (flash) attention, traced offsets.
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_offset, causal: bool = True, block_kv: int = 512,
+                      scale: Optional[float] = None) -> jax.Array:
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D); q_offset may be traced.
+
+    Scans KV blocks with running (m, l, acc); each step is rematerialized in
+    the backward pass (jax.checkpoint) so the S^2 score matrix never lives in
+    memory, forward or backward.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_kv, Skv)
+    while Skv % bk:          # largest divisor of Skv not exceeding block_kv
+        bk -= 1
+    nkv = Skv // bk
+
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    kr = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    kb = kr.reshape(B, Hq, nkv, bk, D).transpose(2, 0, 1, 3, 4)
+    vb = vr.reshape(B, Hq, nkv, bk, D).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, ikv = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, kc)
+        if causal:
+            kv_pos = ikv * bk + jnp.arange(bk)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, Hq, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hq, Sq), jnp.float32),
+            jnp.zeros((B, Hq, Sq, D), jnp.float32))
+    (m, l, acc), _ = lax.scan(step, init, (kb, vb, jnp.arange(nkv)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-decoding partials (longctx decode).
+# ---------------------------------------------------------------------------
+
+class AttnPartial(NamedTuple):
+    m: jax.Array      # (B, H, Sq)
+    l: jax.Array      # (B, H, Sq)
+    acc: jax.Array    # (B, H, Sq, D)
+
+
+def attention_partial(q, k, v, *, kv_pos, q_pos, scale=None) -> AttnPartial:
+    """Partial softmax stats of q against one KV shard (positions given)."""
+    B, Hq, Sq, D = q.shape
+    group = Hq // k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kr)
+    mask = q_pos[:, None] >= kv_pos[None, :]
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p, vr)
+    return AttnPartial(m, l, acc)
+
+
+def combine_partials(part: AttnPartial, pmax_fn, psum_fn) -> jax.Array:
+    """Merge per-shard softmax partials with a log-sum-exp reduction.
+    ``pmax_fn``/``psum_fn`` must reduce over every axis the KV cache is
+    sharded on (grid rows, plus the data axis for batch-1 longctx decode)."""
+    m_glob = pmax_fn(part.m)
+    w = jnp.exp(part.m - m_glob)
+    l_glob = psum_fn(part.l * w)
+    acc_glob = psum_fn(part.acc * w[..., None])
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (train / prefill, blocked layout).
+# ---------------------------------------------------------------------------
+
+def attention_block(pctx: ParallelContext, p: dict, x: jax.Array, cfg,
+                    pos_offset=0) -> Tuple[jax.Array, Optional[Tuple]]:
+    """x (B_loc, S_loc, D_loc) -> (out (B_loc, S_loc, D_loc), kv_for_cache).
+
+    cfg needs: n_heads_padded, n_kv_stored, head_dim, rope_theta, qk_norm,
+    qkv_bias.  Params p: wq, wk, wv, wo (+ bq/bk/bv, q_norm/k_norm scales).
+    """
+    B, S_loc, _ = x.shape
+    grid = pctx.grid
+    i, _ = grid.my_coords()
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hkv_loc = cfg.n_kv_stored // pctx.r
+    hd = cfg.head_dim
+
+    biases = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+    q, k, v = fused_dense(pctx, x, [p["wq"], p["wk"], p["wv"]],
+                          biases=biases)
+    q = q.reshape(B, S_loc, hq_loc, hd)
+    k = k.reshape(B, S_loc, hkv_loc, hd)
+    v = v.reshape(B, S_loc, hkv_loc, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm_local(q, p["q_norm"])
+        k = rms_norm_local(k, p["k_norm"])
+
+    # Global positions of this PE's sequence block.
+    pos = pos_offset + i * S_loc + jnp.arange(S_loc)
+    cos, sin = rope_tables(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+
+    # SHMEM fcollect: every PE gets the full-sequence K/V for its kv heads.
+    k_full = grid.all_gather_rows(k, axis=1)      # (B, S, hkv_loc, hd)
+    v_full = grid.all_gather_rows(v, axis=1)
+
+    out = chunked_attention(
+        q.transpose(0, 2, 1, 3), k_full.transpose(0, 2, 1, 3),
+        v_full.transpose(0, 2, 1, 3),
+        q_offset=pos_offset + i * S_loc, causal=cfg.causal,
+        block_kv=cfg.attn_block_kv)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S_loc, hq_loc * hd)
+    y = dense(pctx, out, p["wo"], kind="crot")   # C-rotating under cannon_opt
+    return y, (k, v)
+
+
+def cross_attention_block(pctx: ParallelContext, p: dict, x: jax.Array,
+                          enc_x: jax.Array, cfg) -> jax.Array:
+    """Encoder-decoder cross attention.  enc_x (B, S_enc_loc, D_loc) blocked;
+    each decoder layer projects K/V with its own weights, then fcollects them
+    over grid rows.  No causal mask, no RoPE (positions live in the encoder)."""
+    B, S_loc, _ = x.shape
+    grid = pctx.grid
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hkv_loc = cfg.n_kv_stored // pctx.r
+    hd = cfg.head_dim
+    q = dense(pctx, x, p["wq"]).reshape(B, S_loc, hq_loc, hd)
+    k, v = fused_dense(pctx, enc_x, [p["wk"], p["wv"]])
+    S_enc_loc = enc_x.shape[1]
+    k = k.reshape(B, S_enc_loc, hkv_loc, hd)
+    v = v.reshape(B, S_enc_loc, hkv_loc, hd)
+    k_full = grid.all_gather_rows(k, axis=1)
+    v_full = grid.all_gather_rows(v, axis=1)
+    out = chunked_attention(
+        q.transpose(0, 2, 1, 3), k_full.transpose(0, 2, 1, 3),
+        v_full.transpose(0, 2, 1, 3), q_offset=0, causal=False,
+        block_kv=cfg.attn_block_kv)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S_loc, hq_loc * hd)
+    return dense(pctx, out, p["wo"])

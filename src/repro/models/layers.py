@@ -1,0 +1,216 @@
+"""Device-level building blocks operating on SHMEM grid blocks.
+
+All functions run inside the step's shard_map.  The activation convention
+("blocked" layout) is x = (T_loc, D_loc): tokens sharded over grid rows (mx),
+features over grid cols (my).  The alternative "repl_rows" layout (tiny-M
+decode) keeps tokens replicated over rows with features over cols.
+
+``ParallelContext`` carries the grid + strategy so layer code is agnostic to
+which distributed GEMM implements its matmuls — cannon (the paper's hybrid
+technique), allgather (the pure-OpenCL analogue), or summa.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cannon import (allgather_matmul, cannon_matmul,
+                               cannon_matmul_crot, gemv2d, summa_matmul)
+from repro.core.shmem import ShmemGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    grid: ShmemGrid
+    data_axes: Tuple[str, ...] = ("data",)
+    tp_strategy: str = "cannon"          # cannon | cannon_opt | allgather | summa
+    preskewed: bool = True               # weights stored Cannon-pre-skewed
+    act_layout: str = "blocked"          # blocked | skewed | repl_rows
+    attn_impl: str = "chunked"           # chunked | ref | pallas
+    compute_dtype: jnp.dtype = jnp.float32
+    remat: bool = False
+
+    @property
+    def q(self):
+        return self.grid.q
+
+    @property
+    def r(self):
+        return self.grid.r
+
+    def with_(self, **kw) -> "ParallelContext":
+        return dataclasses.replace(self, **kw)
+
+
+def _squeeze_block(w: jax.Array) -> jax.Array:
+    """Stored blocked params arrive in the body as (1, ...) — drop the lead."""
+    assert w.shape[0] == 1, w.shape
+    return w[0]
+
+
+def dense(pctx: ParallelContext, x: jax.Array, w_blk: jax.Array,
+          bias: Optional[jax.Array] = None, out_dtype=None,
+          kind: str = "arot") -> jax.Array:
+    """Distributed GEMM: x (T_loc, K_loc) @ W (K, N) -> (T_loc, N_loc).
+
+    ``w_blk`` is the stored block (1, K/q, N/r); bias is the replicated global
+    (N,) vector, sliced to this PE's column block.
+
+    ``kind`` matters only for tp_strategy="cannon_opt" (the alternating
+    skew-free scheme — see core/cannon.py):
+      arot : A-rotating, consumes the SKEWED residual, outputs natural
+      crot : C-rotating, consumes natural, outputs SKEWED
+      std  : classic Cannon incl. A-skew (natural in, natural out)
+    """
+    w = _squeeze_block(w_blk)
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x = x.reshape(-1, x.shape[-1])
+    if pctx.act_layout == "repl_rows":
+        # Decode path: gemv2d reads blocks in natural (K_i, N_j) position.
+        # Decode deployments therefore store weights UNSKEWED (an init/export
+        # -time choice; shapes identical, ckpt converter re-blocks) — moving
+        # whole weight blocks per GEMV would erase the point of the path.
+        assert not pctx.preskewed, "decode contexts require unskewed weights"
+        y = gemv2d(pctx.grid, x, w, out_dtype=out_dtype)
+    elif pctx.tp_strategy == "cannon":
+        y = cannon_matmul(pctx.grid, x, w, preskewed_b=pctx.preskewed,
+                          out_dtype=out_dtype)
+    elif pctx.tp_strategy == "cannon_opt":
+        if kind == "crot":
+            assert bias is None, "crot outputs are skewed; fold bias upstream"
+            y = cannon_matmul_crot(pctx.grid, x, w, out_dtype=out_dtype)
+        elif kind == "arot":
+            y = cannon_matmul(pctx.grid, x, w, preskewed_b=True,
+                              a_preskewed=True, out_dtype=out_dtype)
+        else:  # std: natural input (patch projection, adapters)
+            y = cannon_matmul(pctx.grid, x, w, preskewed_b=True,
+                              out_dtype=out_dtype)
+    elif pctx.tp_strategy == "allgather":
+        y = allgather_matmul(pctx.grid, x, w, out_dtype=out_dtype)
+    elif pctx.tp_strategy == "summa":
+        y = summa_matmul(pctx.grid, x, w, out_dtype=out_dtype)
+    else:
+        raise ValueError(pctx.tp_strategy)
+    y = y.reshape(*lead, y.shape[-1])
+    if bias is not None:
+        y = y + col_slice(pctx, bias, n_loc=y.shape[-1],
+                          layout="blocked").astype(y.dtype)
+    return y
+
+
+def fused_dense(pctx: ParallelContext, x: jax.Array,
+                w_blks: Sequence[jax.Array],
+                biases: Optional[Sequence[Optional[jax.Array]]] = None,
+                out_dtype=None, kind: str = "arot") -> Tuple[jax.Array, ...]:
+    """One distributed GEMM for several column-concatenated projections
+    (QKV, gate+up, mamba in_proj): the A-operand traffic is paid once."""
+    ws = [_squeeze_block(w) for w in w_blks]
+    w_cat = jnp.concatenate(ws, axis=-1)
+    y = dense(pctx, x, w_cat[None], out_dtype=out_dtype, kind=kind)
+    outs, ofs = [], 0
+    for i, w in enumerate(ws):
+        n = w.shape[-1]
+        seg = y[..., ofs:ofs + n]
+        if biases is not None and biases[i] is not None:
+            seg = seg + col_slice(pctx, biases[i], n_loc=n,
+                                  layout="blocked").astype(seg.dtype)
+        outs.append(seg)
+        ofs += n
+    return tuple(outs)
+
+
+def col_slice(pctx: ParallelContext, vec: jax.Array, n_loc: Optional[int] = None,
+              layout: Optional[str] = None) -> jax.Array:
+    """Slice this PE's column block from a replicated feature vector (N,).
+
+    ``layout`` is the layout of the tensor the slice will combine with
+    (defaults to the residual-stream layout): under the skewed layout
+    (cannon_opt) PE (i, j) holds feature block (i + j) % q, not j."""
+    n_loc = n_loc or vec.shape[-1] // pctx.r
+    i, j = pctx.grid.my_coords()
+    layout = layout or pctx.act_layout
+    idx = (i + j) % pctx.q if layout == "skewed" else j
+    return jax.lax.dynamic_slice_in_dim(vec, idx * n_loc, n_loc, axis=-1)
+
+
+def row_slice_tokens(pctx: ParallelContext, x: jax.Array, axis: int = 1
+                     ) -> jax.Array:
+    """Slice this PE's sequence block (S_i) from a seq-replicated array."""
+    s_loc = x.shape[axis] // pctx.q
+    i, _ = pctx.grid.my_coords()
+    return jax.lax.dynamic_slice_in_dim(x, i * s_loc, s_loc, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Norms (feature dim sharded over grid cols -> stats need a col psum).
+# ---------------------------------------------------------------------------
+
+def rms_norm(pctx: ParallelContext, x: jax.Array, scale: jax.Array,
+             eps: float = 1e-6) -> jax.Array:
+    d_global = scale.shape[-1]
+    x32 = x.astype(jnp.float32)
+    ss = pctx.grid.psum_cols(jnp.sum(x32 * x32, axis=-1, keepdims=True))
+    inv = jax.lax.rsqrt(ss / d_global + eps)
+    return (x32 * inv * col_slice(pctx, scale).astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layer_norm(pctx: ParallelContext, x: jax.Array, scale: jax.Array,
+               bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    d_global = scale.shape[-1]
+    x32 = x.astype(jnp.float32)
+    s1 = pctx.grid.psum_cols(jnp.sum(x32, axis=-1, keepdims=True))
+    mean = s1 / d_global
+    s2 = pctx.grid.psum_cols(jnp.sum(x32 * x32, axis=-1, keepdims=True))
+    var = s2 / d_global - mean * mean
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x32 - mean) * inv * col_slice(pctx, scale).astype(jnp.float32)
+    return (y + col_slice(pctx, bias).astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_local(x: jax.Array, scale: jax.Array, eps: float = 1e-6
+                   ) -> jax.Array:
+    """Norm over an UNsharded trailing dim (per-head qk-norm, gated SSM norm)."""
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., T, H, hd); cos/sin (..., T, hd/2) — rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations.
+# ---------------------------------------------------------------------------
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)

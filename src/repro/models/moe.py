@@ -1,0 +1,157 @@
+"""Mixture-of-Experts on the SHMEM grid: EP over the flat PE space.
+
+Expert parallelism is the paper's PGAS story at its purest: experts are
+symmetric objects distributed over the flat OpenSHMEM PE space (e // E_loc
+owns expert e — flat PE arithmetic), and dispatch/combine are all_to_all
+exchanges over the NoC/ICI.
+
+Token hidden states are feature-sharded over grid cols (D_loc per PE), and
+routing decisions are bit-identical across the row (router logits are
+col-psummed), so each PE ships only its own D_loc slice; after the flat
+all_to_all, slices from the r cols of a source row reassemble into full-D
+tokens on the expert owner.  Per-PE wire volume is T*k*D/16 — the minimum
+possible (each routed token's hidden crosses the wire exactly once).
+
+Expert compute: tokens sorted by local expert id, one grouped GEMM via
+``lax.ragged_dot`` (MegaBlocks-style, differentiable), swiglu, second
+grouped GEMM, inverse exchange, weighted scatter-add combine.  Capacity
+overflow tokens are dropped (counted and returned for the aux metrics).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParallelContext, col_slice
+
+
+def _router(pctx: ParallelContext, x2d: jax.Array, wr: jax.Array, cfg):
+    """x2d (T, D_loc) -> (probs (T, E) fp32, logits fp32); wr replicated (D, E).
+    The row slice follows the residual layout (skewed under cannon_opt)."""
+    i, j = pctx.grid.my_coords()
+    d_loc = x2d.shape[-1]
+    idx = (i + j) % pctx.q if pctx.act_layout == "skewed" else j
+    wr_j = lax.dynamic_slice_in_dim(wr, idx * d_loc, d_loc, axis=0)
+    part = x2d.astype(jnp.float32) @ wr_j.astype(jnp.float32)
+    logits = pctx.grid.psum_cols(part)
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def moe_block(pctx: ParallelContext, p: Dict, x: jax.Array, cfg
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, S_loc, D_loc) -> (y same shape, metrics {aux_loss, dropped})."""
+    grid = pctx.grid
+    n_pes = grid.n_pes
+    B, S_loc, D_loc = x.shape
+    T = B * S_loc
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // n_pes
+    cap = int(math.ceil(T * k / n_pes * cfg.capacity_factor))
+
+    x2d = x.reshape(T, D_loc)
+    probs, logits = _router(pctx, x2d, p["router"], cfg)  # router is replicated
+    top_w, top_e = lax.top_k(probs, k)                      # (T, k)
+    if cfg.router_renorm:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- dispatch bookkeeping (identical across the grid row) -------------
+    fe = top_e.reshape(-1)                                  # (T*k,)
+    fw = top_w.reshape(-1).astype(jnp.float32)
+    ft = jnp.repeat(jnp.arange(T), k)
+    dest = fe // E_loc                                      # owner PE, flat
+    oh = jax.nn.one_hot(dest, n_pes, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh                       # exclusive rank
+    pos = jnp.sum(pos * oh, axis=-1)                        # (T*k,)
+    valid = pos < cap
+    slot = jnp.where(valid, pos, cap)                       # cap -> dropped
+    dropped = jnp.sum(1 - valid.astype(jnp.int32))
+
+    send_x = jnp.zeros((n_pes, cap + 1, D_loc), x.dtype
+                       ).at[dest, slot].set(x2d[ft])[:, :cap]
+    send_le = jnp.zeros((n_pes, cap + 1), jnp.int32
+                        ).at[dest, slot].set(fe % E_loc)[:, :cap]
+
+    # ---- flat all_to_all + full-D reassembly ------------------------------
+    # int8 wire option (DeepSeek-style low-precision dispatch): per-slot
+    # block quantization; scales (1/D_loc of the payload) ride along fp32.
+    int8_wire = cfg.moe_wire_dtype == "int8"
+
+    def _a2a(t):
+        return lax.all_to_all(t, grid.axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+    if int8_wire:
+        sc = jnp.max(jnp.abs(send_x.astype(jnp.float32)), axis=-1,
+                     keepdims=True) / 127.0 + 1e-12
+        q8 = jnp.clip(jnp.round(send_x.astype(jnp.float32) / sc),
+                      -127, 127).astype(jnp.int8)
+        recv_x = (_a2a(q8).astype(jnp.float32)
+                  * _a2a(sc.astype(jnp.float32))).astype(x.dtype)
+    else:
+        recv_x = _a2a(send_x)                               # (n_pes, cap, D_loc)
+    recv_le = _a2a(send_le)
+    q, r = grid.q, grid.r
+    # source PE s = (i_s, j_s) sent its residual slice of row i_s's tokens:
+    # D_{j_s} naturally, D_{(i_s+j_s)%q} under the skewed layout — roll each
+    # source row's pieces back into natural feature order before reassembly.
+    xs = recv_x.reshape(q, r, cap, D_loc)
+    skewed = pctx.act_layout == "skewed"
+    if skewed:
+        xs = jnp.stack([jnp.roll(xs[i], i, axis=0) for i in range(q)])
+    xs = xs.transpose(0, 2, 1, 3)
+    xs = xs.reshape(q * cap, r * D_loc)                     # (M, D) full hidden
+    les = recv_le.reshape(q, r, cap)[:, 0].reshape(q * cap)
+
+    # ---- grouped expert FFN (sort by expert, ragged GEMMs) ----------------
+    perm = jnp.argsort(les, stable=True)
+    xs_sorted = xs[perm]
+    group_sizes = jnp.bincount(les, length=E_loc)
+    w1 = p["w1"][0]                                         # (E_loc, D, 2F)
+    w2 = p["w2"][0]                                         # (E_loc, F, D)
+    h = lax.ragged_dot(xs_sorted, w1, group_sizes)          # (M, 2F)
+    F = w2.shape[1]
+    h = (jax.nn.silu(h[:, :F].astype(jnp.float32)).astype(h.dtype)
+         * h[:, F:])
+    ye = lax.ragged_dot(h, w2, group_sizes)                 # (M, D)
+    ys = jnp.zeros_like(ye).at[perm].set(ye)                # unsort
+
+    # ---- inverse exchange + weighted combine ------------------------------
+    yd = ys.reshape(q, cap, r, D_loc).transpose(0, 2, 1, 3)
+    if skewed:   # restore each destination row's skewed slice order
+        yd = jnp.stack([jnp.roll(yd[i], -i, axis=0) for i in range(q)])
+    yd = yd.reshape(n_pes, cap, D_loc)
+    if int8_wire:
+        sc = jnp.max(jnp.abs(yd.astype(jnp.float32)), axis=-1,
+                     keepdims=True) / 127.0 + 1e-12
+        q8 = jnp.clip(jnp.round(yd.astype(jnp.float32) / sc),
+                      -127, 127).astype(jnp.int8)
+        back = (_a2a(q8).astype(jnp.float32)
+                * _a2a(sc.astype(jnp.float32))).astype(yd.dtype)
+    else:
+        back = _a2a(yd)                                     # (n_pes, cap, D_loc)
+    gathered = back[dest, slot]                             # (T*k, D_loc)
+    gathered = jnp.where(valid[:, None], gathered, 0)
+    contrib = gathered.astype(jnp.float32) * fw[:, None]
+    y = jnp.zeros((T, D_loc), jnp.float32).at[ft].add(contrib)
+
+    # ---- aux losses (switch-style load balance + router z) ----------------
+    # frac/pmean must be averaged over ALL token shards (grid rows + data)
+    # BEFORE the product — mean-of-products != product-of-means.
+    frac = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=0)
+    frac = grid.psum_rows(frac) / grid.q
+    pmean = grid.psum_rows(pmean) / grid.q
+    for ax in pctx.data_axes:
+        frac = lax.pmean(frac, ax)
+        pmean = lax.pmean(pmean, ax)
+    aux = E * jnp.sum(frac * pmean) * cfg.moe_aux_coef
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.moe_z_coef
+
+    metrics = {"moe_aux": aux + zloss,
+               "moe_dropped": dropped.astype(jnp.float32) / (T * k)}
+    return y.astype(x.dtype).reshape(B, S_loc, D_loc), metrics

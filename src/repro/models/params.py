@@ -1,0 +1,176 @@
+"""Parameter specification + construction for SHMEM-blocked models.
+
+Every parameter is described by a :class:`ParamSpec` carrying its *stored*
+(per-mesh) shape, partition spec, and initializer.  Specs serve three
+consumers with one source of truth:
+
+  * ``init_params``      — materialize real arrays (smoke tests, training)
+  * ``abstract_params``  — ShapeDtypeStructs for the dry-run (no allocation)
+  * ``shardings``        — NamedShardings for jit in_shardings / checkpoint
+
+Stored layouts (see repro/partition.py):
+  blocked2d   (n_blocks, K/q, N/r)        lead dim over MODEL; PE (i,j) holds
+                                          block (K_i, N_j) — optionally Cannon
+                                          pre-skewed (K_{(i+j)%q}, N_j)
+  vocab2d     (n_blocks, V/q, D/r)        embedding table blocks
+  expert2d    (n_blocks, E/q, K/r, N)     experts over grid rows, K over cols
+  replicated  (global shape)              P() — biases, norm scales, A, conv
+Stacked per layer-group: a leading ``(groups,)`` dim may precede any of the
+above (scan-over-layers); the PartitionSpec gains a leading None.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.partition import MODEL, pad_to_multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]            # stored shape (includes block dims)
+    dtype: Any
+    pspec: P
+    init: str = "normal"              # normal | zeros | ones
+    init_scale: float = 0.02
+    fan_in: Optional[int] = None      # for 1/sqrt(fan_in) scaling
+    col_replicas: int = 1             # grad-tied column replica count (GQA kv)
+    meta: Tuple[Tuple[str, Any], ...] = ()   # layout breadcrumbs
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def _stack(spec: ParamSpec, groups: Optional[int]) -> ParamSpec:
+    if groups is None:
+        return spec
+    return dataclasses.replace(
+        spec, shape=(groups,) + spec.shape,
+        pspec=P(*((None,) + tuple(spec.pspec))))
+
+
+def blocked2d(K: int, N: int, q: int, r: int, *, dtype, skew: bool = False,
+              groups: Optional[int] = None, init: str = "normal",
+              col_replicas: int = 1, fan_in: Optional[int] = None) -> ParamSpec:
+    assert K % q == 0 and N % r == 0, (K, N, q, r)
+    spec = ParamSpec((q * r, K // q, N // r), dtype, P(MODEL), init=init,
+                     fan_in=fan_in if fan_in is not None else K,
+                     col_replicas=col_replicas,
+                     meta=(("layout", "blocked2d"), ("K", K), ("N", N),
+                           ("skew", skew)))
+    return _stack(spec, groups)
+
+
+def vocab2d(V: int, D: int, q: int, r: int, *, dtype,
+            groups: Optional[int] = None) -> ParamSpec:
+    assert V % q == 0 and D % r == 0, (V, D, q, r)
+    spec = ParamSpec((q * r, V // q, D // r), dtype, P(MODEL), init="normal",
+                     fan_in=None, meta=(("layout", "vocab2d"), ("V", V), ("D", D)))
+    return _stack(spec, groups)
+
+
+def expert2d(E: int, K: int, N: int, q: int, r: int, *, dtype,
+             groups: Optional[int] = None,
+             fan_in: Optional[int] = None) -> ParamSpec:
+    assert E % q == 0 and K % r == 0, (E, K, q, r)
+    spec = ParamSpec((q * r, E // q, K // r, N), dtype, P(MODEL),
+                     fan_in=fan_in if fan_in is not None else K,
+                     meta=(("layout", "expert2d"), ("E", E), ("K", K), ("N", N)))
+    return _stack(spec, groups)
+
+
+def replicated(shape: Tuple[int, ...], *, dtype, init: str = "zeros",
+               groups: Optional[int] = None,
+               fan_in: Optional[int] = None) -> ParamSpec:
+    spec = ParamSpec(tuple(shape), dtype, P(), init=init, fan_in=fan_in,
+                     meta=(("layout", "replicated"),))
+    return _stack(spec, groups)
+
+
+# ---------------------------------------------------------------------------
+# Materialization.
+# ---------------------------------------------------------------------------
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        scale = spec.init_scale if spec.fan_in is None else spec.fan_in ** -0.5
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale
+                ).astype(spec.dtype)
+    if spec.init == "ssm_a":    # A = -exp(U(log .5, log 8)) as in Mamba2
+        lo, hi = math.log(0.5), math.log(8.0)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, lo, hi)
+        return (-jnp.exp(u)).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def _tie_col_replicas(arr: jax.Array, spec: ParamSpec, q: int, r: int):
+    """Make kv column replicas bit-equal at init (tied-GQA semantics).
+
+    Block (i, j) holds W[K_a, N_{j//rep}] with a = (i+j)%q if pre-skewed else
+    i; every block copies from its group's j=g*rep leader.
+    """
+    rep = spec.col_replicas
+    skew = dict(spec.meta).get("skew", False)
+    base_ndim = 3
+    stacked = len(spec.shape) == base_ndim + 1
+    a = arr if stacked else arr[None]
+
+    idx = []
+    for pe in range(q * r):
+        i, j = divmod(pe, r)
+        lead_j = (j // rep) * rep
+        ka = (i + j) % q if skew else i
+        lead_i = (ka - lead_j) % q if skew else ka
+        idx.append(lead_i * r + lead_j)
+    out = a[:, jnp.asarray(idx)]
+    return out if stacked else out[0]
+
+
+def init_params(specs, seed: int = 0):
+    """Materialize a pytree of ParamSpecs into arrays (host-side; small/smoke
+    configs — production init happens jit-sharded in launch/train.py)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    arrs = []
+    for k, s in zip(keys, leaves):
+        a = _init_leaf(k, s)
+        if s.col_replicas > 1:
+            a = _tie_col_replicas(a, s, *_grid_from_spec(s))
+        arrs.append(a)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def _grid_from_spec(s: ParamSpec):
+    meta = dict(s.meta)
+    K, N = meta["K"], meta["N"]
+    base = s.shape[-3:]           # (q*r, K/q, N/r)
+    q = K // base[1]
+    r = N // base[2]
+    return q, r
+
+
+def abstract_params(specs):
+    return jax.tree.map(lambda s: s.abstract(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_pspecs(specs):
+    return jax.tree.map(lambda s: s.pspec, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))

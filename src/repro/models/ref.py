@@ -1,0 +1,253 @@
+"""Single-device reference model: identical math on GLOBAL (unblocked)
+parameters.  The distributed forward must agree with this oracle to fp
+tolerance — the test that validates every blocking / skew / collective.
+
+Use ``gather_params`` to convert a blocked param pytree into global arrays.
+MoE reference runs dropless (tests pin capacity_factor high so the parallel
+path drops nothing either).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cannon import unblock_2d
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rope_tables
+
+
+# ---------------------------------------------------------------------------
+# Param gathering (blocked -> global).
+# ---------------------------------------------------------------------------
+
+def _unblock(arr: np.ndarray, spec: pm.ParamSpec, q: int, r: int):
+    meta = dict(spec.meta)
+    layout = meta.get("layout", "replicated")
+
+    def un(a):
+        if layout == "blocked2d":
+            return unblock_2d(jnp.asarray(a), q, r, skew_b=meta["skew"])
+        if layout == "vocab2d":
+            # (q*r, V/q, D/r) -> (V, D)
+            Vq, Dr = a.shape[1], a.shape[2]
+            out = np.zeros((Vq * q, Dr * r), a.dtype)
+            for i in range(q):
+                for j in range(r):
+                    out[i * Vq:(i + 1) * Vq, j * Dr:(j + 1) * Dr] = a[i * r + j]
+            return jnp.asarray(out)
+        if layout == "expert_flat":
+            # (n_pes, E_loc, ...) -> (E, ...)
+            return jnp.asarray(a).reshape((-1,) + a.shape[2:])
+        return jnp.asarray(a)
+
+    a = np.asarray(arr)
+    base_ndim = {"blocked2d": 3, "vocab2d": 3, "expert_flat": 4}.get(layout)
+    if base_ndim is not None and a.ndim == base_ndim + 1:   # group-stacked
+        return jnp.stack([un(a[g]) for g in range(a.shape[0])])
+    return un(a)
+
+
+def gather_params(params, specs, q: int, r: int):
+    return jax.tree.map(
+        lambda a, s: _unblock(a, s, q, r), params, specs,
+        is_leaf=lambda x: isinstance(x, pm.ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Reference forward.
+# ---------------------------------------------------------------------------
+
+def _norm_ref(cfg, p, x):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = x32.mean(-1, keepdims=True)
+        var = x32.var(-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        y = x32 * jax.lax.rsqrt(
+            (x32 * x32).mean(-1, keepdims=True) + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def _rms_local_ref(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _attn_ref(cfg, p, x, r: int, causal=True, pos_offset=0):
+    B, S, D = x.shape
+    hd = cfg.hd()
+    hp = cfg.heads_padded(r)
+    kvs, _ = cfg.kv_stored(r)
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hp, hd)
+    k = k.reshape(B, S, kvs, hd)
+    v = v.reshape(B, S, kvs, hd)
+    if cfg.qk_norm:
+        q = _rms_local_ref(q, p["q_norm"])
+        k = _rms_local_ref(k, p["k_norm"])
+    pos = pos_offset + jnp.arange(S)
+    cos, sin = rope_tables(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    # stored kv may be column-replicated; dedupe replicas for the oracle
+    # (replicas are initialized identical, so taking every rep-th head and
+    # repeating reproduces the parallel mapping exactly).
+    out = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, hp * hd)
+    return out @ p["wo"]
+
+
+def _mlp_ref(cfg, p, x):
+    if cfg.act == "swiglu":
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = x @ p["w_up"]
+        if cfg.mlp_bias:
+            u = u + p["b_up"]
+        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(x.dtype)
+    y = h @ p["w_down"]
+    if cfg.mlp_bias and cfg.act != "swiglu":
+        y = y + p["b_down"]
+    return y
+
+
+def _moe_ref(cfg, p, x):
+    B, S, D = x.shape
+    T = B * S
+    x2 = x.reshape(T, D)
+    logits = x2.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_renorm:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    F = p["w2"].shape[1]
+    y = jnp.zeros((T, D), jnp.float32)
+    for kk in range(cfg.top_k):
+        w1_sel = p["w1"][top_e[:, kk]]            # (T, D, 2F)
+        h = jnp.einsum("td,tdf->tf", x2, w1_sel)
+        h = jax.nn.silu(h[:, :F].astype(jnp.float32)).astype(h.dtype) * h[:, F:]
+        w2_sel = p["w2"][top_e[:, kk]]
+        y = y + (jnp.einsum("tf,tfd->td", h, w2_sel).astype(jnp.float32)
+                 * top_w[:, kk:kk + 1])
+    aux = cfg.n_experts * jnp.sum(
+        jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts), axis=(0, 1))
+        * jnp.mean(probs, axis=0)) * cfg.moe_aux_coef
+    zl = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2) * cfg.moe_z_coef
+    return y.astype(x.dtype).reshape(B, S, D), aux + zl
+
+
+def _mamba_ref(cfg, p, x):
+    B, S, D = x.shape
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    di = cfg.d_inner
+    k = cfg.conv_kernel
+    z = x @ p["wz"]
+    xc = x @ p["wx"]
+    Bc = x @ p["wb"]
+    Cc = x @ p["wc"]
+    dt = x @ p["wdt"]
+    xBC = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    halo = jnp.zeros((B, k - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([halo, xBC], axis=1)
+    conv = sum(xp[:, i:i + S] * p["conv_w"][i][None, None] for i in range(k))
+    xBC = jax.nn.silu((conv + p["conv_b"][None, None]).astype(jnp.float32)
+                      ).astype(x.dtype)
+    xc = xBC[..., :di]
+    Bc = xBC[..., di:di + G * N].reshape(B, S, G, N)
+    Cc = xBC[..., di + G * N:].reshape(B, S, G, N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xc.reshape(B, S, H, P)
+    y, _ = ssd_ref(xh, dtv, p["A"], Bc, Cc)
+    y = y.astype(jnp.float32) + p["D"][None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = _rms_local_ref(y.astype(x.dtype), p["ssm_norm"])
+    return y @ p["wo"]
+
+
+def forward_ref(cfg: ModelConfig, gp: Dict, batch: Dict):
+    """Returns (x_final (B, S, D), aux)."""
+    cd = cfg.compute_dtype
+    tokens = batch["tokens"]
+    table = gp["embed"]
+    x = jnp.where(tokens[..., None] >= 0,
+                  jnp.take(table, jnp.clip(tokens, 0), axis=0), 0).astype(cd)
+
+    enc_out = None
+    if cfg.enc_layers:
+        ecfg = dataclasses.replace(cfg, causal=False)
+        e = batch["frames"].astype(cd) + gp["enc_pos"][None].astype(cd)
+        for g in range(cfg.enc_layers):
+            lp = jax.tree.map(lambda a: a[g], gp["enc_layers"][0])
+            e = e + _attn_ref(ecfg, lp["mixer"], _norm_ref(ecfg, lp["norm1"], e),
+                              4, causal=False)
+            e = e + _mlp_ref(ecfg, lp["ffn"], _norm_ref(ecfg, lp["norm2"], e))
+        enc_out = _norm_ref(ecfg, gp["enc_final_norm"], e)
+    if cfg.vis_patches:
+        P = batch["patches"].shape[1]
+        pad = jnp.zeros((x.shape[0], x.shape[1] - P, x.shape[2]), x.dtype)
+        proj = (batch["patches"].astype(cd) @ gp["vis_proj"])
+        x = x + jnp.concatenate([proj, pad], axis=1)
+
+    aux = jnp.zeros((), jnp.float32)
+    pattern = cfg.pattern()
+    for g in range(cfg.n_groups()):
+        for pos, (mixer, ffn) in enumerate(pattern):
+            lp = jax.tree.map(lambda a: a[g], gp["layers"][pos])
+            h = _norm_ref(cfg, lp["norm1"], x)
+            if mixer == "attn":
+                x = x + _attn_ref(cfg, lp["mixer"], h, 4, causal=cfg.causal)
+            else:
+                x = x + _mamba_ref(cfg, lp["mixer"], h)
+            if "cross" in lp:
+                h = _norm_ref(cfg, lp["norm_cross"], x)
+                qx = h @ lp["cross"]["wq"]
+                B, S, _ = h.shape
+                hd = cfg.hd()
+                hp = cfg.heads_padded(4)
+                kvs, _ = cfg.kv_stored(4)
+                qx = qx.reshape(B, S, hp, hd)
+                kx = (enc_out @ lp["cross"]["wk"]).reshape(
+                    B, enc_out.shape[1], kvs, hd)
+                vx = (enc_out @ lp["cross"]["wv"]).reshape(
+                    B, enc_out.shape[1], kvs, hd)
+                o = attention_ref(qx.transpose(0, 2, 1, 3),
+                                  kx.transpose(0, 2, 1, 3),
+                                  vx.transpose(0, 2, 1, 3), causal=False)
+                x = x + o.transpose(0, 2, 1, 3).reshape(B, S, hp * hd) @ \
+                    lp["cross"]["wo"]
+            if ffn == "mlp":
+                x = x + _mlp_ref(cfg, lp["ffn"], _norm_ref(cfg, lp["norm2"], x))
+            elif ffn == "moe":
+                y, a = _moe_ref(cfg, lp["ffn"], _norm_ref(cfg, lp["norm2"], x))
+                x, aux = x + y, aux + a
+    return _norm_ref(cfg, gp["final_norm"], x), aux
+
+
+def loss_ref(cfg: ModelConfig, gp: Dict, batch: Dict):
+    x, aux = forward_ref(cfg, gp, batch)
+    logits = (x @ gp["lm_head"]).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = (labels >= 0) & (labels < logits.shape[-1])
+    lse = jax.nn.logsumexp(logits, -1)
+    tgt = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    tok = jnp.where(valid, lse - tgt, 0.0)
+    return tok.sum() / jnp.maximum(valid.sum(), 1) + aux

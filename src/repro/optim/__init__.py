@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_state,
+                               lr_schedule, state_pspecs)
+from repro.optim.compress import compressed_allreduce, compressed_psum

@@ -1,0 +1,171 @@
+"""AdamW with optional 8-bit state quantization and gradient compression.
+
+Pure pytree-functional (no optax dependency).  All update math runs inside
+the step's shard_map on local blocks, so optimizer state inherits parameter
+sharding for free.  Two distributed-optimization extensions (beyond-paper,
+used in §Perf):
+
+  * ``state_bits=8`` — block-quantized first/second moments (int8 + fp32
+    per-block scale, block = trailing 128): 4x optimizer-state memory cut.
+  * gradient compression for the DP all-reduce — see ``compress.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 32          # 32 or 8
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+QBLOCK = 128
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+class MomentState(NamedTuple):
+    dense: Optional[jax.Array]          # fp32 (state_bits=32)
+    q: Optional[jax.Array]              # int8  (state_bits=8)
+    scale: Optional[jax.Array]
+
+
+def _init_moment(p: jax.Array, bits: int) -> MomentState:
+    if bits == 8:
+        q, s = _quantize(jnp.zeros(p.shape, jnp.float32))
+        return MomentState(None, q, s)
+    return MomentState(jnp.zeros(p.shape, jnp.float32), None, None)
+
+
+def _read(m: MomentState, shape) -> jax.Array:
+    return m.dense if m.dense is not None else _dequantize(m.q, m.scale, shape)
+
+
+def _write(val: jax.Array, bits: int) -> MomentState:
+    if bits == 8:
+        q, s = _quantize(val)
+        return MomentState(None, q, s)
+    return MomentState(val, None, None)
+
+
+def init_state(params, cfg: AdamWConfig):
+    return dict(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(lambda p: _init_moment(p, cfg.state_bits), params,
+                       is_leaf=lambda x: isinstance(x, jax.Array)),
+        v=jax.tree.map(lambda p: _init_moment(p, cfg.state_bits), params,
+                       is_leaf=lambda x: isinstance(x, jax.Array)),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(grads, psum_fn=None) -> jax.Array:
+    """L2 norm over the pytree.  ``psum_fn`` must sum the local squared norm
+    over the model axis (blocked params are disjoint shards) if called inside
+    shard_map."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    if psum_fn is not None:
+        sq = psum_fn(sq)
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  psum_fn=None, decay_mask=None, grad_norm=None):
+    """One AdamW step.  Returns (new_params, new_state, metrics).
+
+    ``grad_norm``: precomputed GLOBAL norm (train/step.reduce_grads knows the
+    sharding layouts); falls back to a local computation if absent."""
+    step = state["step"] + 1
+    gnorm = grad_norm if grad_norm is not None else global_norm(grads, psum_fn)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_mask = (tdef.flatten_up_to(decay_mask) if decay_mask is not None
+                 else [True] * len(flat_p))
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, dm in zip(flat_p, flat_g, flat_m, flat_v, flat_mask):
+        g32 = g.astype(jnp.float32) * clip
+        mval = _read(m, p.shape) * cfg.b1 + (1 - cfg.b1) * g32
+        vval = _read(v, p.shape) * cfg.b2 + (1 - cfg.b2) * g32 * g32
+        upd = (mval / b1c) / (jnp.sqrt(vval / b2c) + cfg.eps)
+        if dm and cfg.weight_decay > 0:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(_write(mval, cfg.state_bits))
+        new_v.append(_write(vval, cfg.state_bits))
+
+    new_params = tdef.unflatten(new_p)
+    new_state = dict(step=step, m=tdef.unflatten(new_m),
+                     v=tdef.unflatten(new_v))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_pspecs(param_pspecs_tree, cfg: AdamWConfig):
+    """Optimizer-state PartitionSpecs.
+
+    32-bit moments mirror the parameter layout exactly (same shapes).  8-bit
+    moments quantize per-LOCAL-shard inside the step's shard_map; their
+    boundary arrays are (model_size * nblocks_loc, 128) int8 + fp32 scales,
+    dim 0 sharded over MODEL for model-sharded params and replicated
+    otherwise.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def mom(ps):
+        if cfg.state_bits == 8:
+            lead = tuple(ps)[0] if len(tuple(ps)) else None
+            qs = P(lead, None)
+            return MomentState(None, qs, qs)
+        return MomentState(ps, None, None)
+
+    return dict(
+        step=P(),
+        m=jax.tree.map(mom, param_pspecs_tree),
+        v=jax.tree.map(mom, param_pspecs_tree),
+    )

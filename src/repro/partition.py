@@ -1,0 +1,151 @@
+"""Logical parallelism axes and sharding helpers.
+
+The production mesh is flat: ``(data, model)`` single-pod or ``(pod, data, model)``
+multi-pod (prescribed by the launch contract).  Following the paper's OpenSHMEM
+convention — PEs are numbered flat and any grid structure is index arithmetic done
+by the program — the ``model`` axis of size 16 is treated by the core library as a
+logical ``q x q`` (4x4) PE grid.  Nothing in the mesh itself is 2D; the grid lives
+entirely in permutation arithmetic (see ``repro.core.shmem``).
+
+Canonical block layouts (train / prefill path; all INSIDE the step's shard_map —
+activations never cross the jit boundary):
+
+  residual x   : (batch, seq, d_model)  -> batch over DATA, seq over grid-rows (mx),
+                                           d_model over grid-cols (my)
+  weights W    : (d_in, d_out)          -> d_in over mx, d_out over my   (2D blocks),
+                                           stored as (16, d_in/q, d_out/r), lead dim
+                                           sharded over the flat model axis
+  kv cache     : (batch, s_ctx, kvh, hd)-> batch over DATA(+mx when it divides),
+                                           kv-heads over my; for batch=1 long-context
+                                           decode s_ctx shards over mx (flash-decode)
+
+Because ``mx``/``my`` are *logical* sub-axes of the flat ``model`` axis, JAX-level
+``PartitionSpec``s can only name ``model``.  A 2D-blocked tensor is therefore
+stored with an explicit leading block dim: shape ``(model_size, d0//q, d1//r)``
+with the leading dim sharded over ``model``; device ``pe`` sees
+``(1, d0//q, d1//r)``, squeezes it, and treats itself as block
+``(i, j) = (pe // r, pe % r)``.  This makes the 2D block assignment explicit,
+checkpointable, and mesh-agnostic (elastic reload just re-shards the lead dim).
+
+All helpers here are pure metadata — no jax device state is touched at import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Axis names (prescribed by the launch contract).
+POD = "pod"
+DATA = "data"
+MODEL = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Static description of the parallelism plan for one mesh.
+
+    ``grid_q`` x ``grid_r`` is the logical SHMEM PE grid embedded in the flat
+    ``model`` axis (row-major: pe = i * grid_r + j).
+    """
+
+    axis_names: Tuple[str, ...]          # e.g. ("data", "model") or ("pod","data","model")
+    axis_sizes: Tuple[int, ...]
+    grid_q: int                          # grid rows (mx)
+    grid_r: int                          # grid cols (my)
+    pp_stages: int = 1                   # pipeline stages over the pod axis (1 = pure DP)
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_sizes[self.axis_names.index(MODEL)]
+
+    @property
+    def data_size(self) -> int:
+        return self.axis_sizes[self.axis_names.index(DATA)]
+
+    @property
+    def pod_size(self) -> int:
+        return self.axis_sizes[self.axis_names.index(POD)] if POD in self.axis_names else 1
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.axis_sizes))
+
+    @property
+    def has_pod(self) -> bool:
+        return POD in self.axis_names
+
+    def __post_init__(self):
+        assert self.grid_q * self.grid_r == self.model_size, (
+            f"grid {self.grid_q}x{self.grid_r} != model axis {self.model_size}")
+        if self.pp_stages > 1:
+            assert self.has_pod and self.pod_size % self.pp_stages == 0
+
+
+def plan_for_mesh(mesh: Mesh, grid_q: Optional[int] = None, pp_stages: int = 1) -> MeshPlan:
+    names = tuple(mesh.axis_names)
+    sizes = tuple(mesh.devices.shape)
+    msize = sizes[names.index(MODEL)]
+    if grid_q is None:
+        grid_q = int(math.isqrt(msize))
+        while msize % grid_q:
+            grid_q -= 1
+    return MeshPlan(names, sizes, grid_q, msize // grid_q, pp_stages)
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec builders for the canonical layouts.
+# ---------------------------------------------------------------------------
+
+def spec_replicated() -> P:
+    return P()
+
+
+def spec_batch(plan: MeshPlan, *trailing: Any) -> P:
+    """Batch dim sharded over (pod?, data)."""
+    lead = (POD, DATA) if plan.has_pod and plan.pp_stages == 1 else (DATA,)
+    return P(lead, *trailing)
+
+
+def spec_tokens(plan: MeshPlan) -> P:
+    """Token/label ids (batch, seq): batch over data(+pod); seq REPLICATED over
+    model.  Ids are int32 and tiny; every PE slices its own seq block (S_i,
+    i = pe // r) locally, which is what the Cannon block layout needs.  All
+    activation tensors live only *inside* the step's shard_map body in
+    (S_mx-block, D_my-block) layout — they never cross the jit boundary.
+    """
+    return spec_batch(plan, None)
+
+
+def spec_blocked_param() -> P:
+    """Stored 2D-blocked param: (n_blocks=16, d_in//q, d_out//r) — leading over model."""
+    return P(MODEL)
+
+
+def spec_model_sharded(dim_index: int, ndim: int) -> P:
+    parts: list = [None] * ndim
+    parts[dim_index] = MODEL
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def shard_leaf(mesh: Mesh, x: jax.Array, spec: P) -> jax.Array:
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def divide(a: int, b: int, what: str = "") -> int:
+    assert a % b == 0, f"{what}: {a} not divisible by {b}"
+    return a // b
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

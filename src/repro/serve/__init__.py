@@ -1,0 +1,1 @@
+from repro.serve.decode import cache_pspecs, cache_specs, make_decode_step, make_prefill

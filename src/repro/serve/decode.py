@@ -1,0 +1,414 @@
+"""Serving: prefill + decode steps on the SHMEM grid.
+
+Two decode layouts, chosen by batch size (see DESIGN.md §Parallelism):
+
+  * ``batched``  — batch sharded over (data, grid rows), heads over cols.
+    KV cache fully PE-local: decode attention needs ZERO communication;
+    projections run the normal Cannon path with M = local batch.
+    (decode_32k: B=128 over 16 data x 4 rows -> 2 seqs/PE.)
+
+  * ``longctx``  — batch too small to shard (B=1, 500k context).  Weights
+    stored UNSKEWED; projections via gemv2d (stationary weights, tiny
+    activations move).  KV cache *sequence*-sharded over (data x grid rows):
+    each PE scores its cache chunk and partials merge with a log-sum-exp
+    reduction (flash-decoding as a SHMEM collective).  SSM archs carry O(1)
+    state instead — this is why long_500k is an SSM/hybrid-only cell.
+
+Cache boundary layout: every leaf is (groups, n_pes, ...local) with dim 1
+sharded over MODEL and (batched mode) the local batch dim over DATA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import params as pm
+from repro.models.attention import (AttnPartial, attention_partial,
+                                    combine_partials)
+from repro.models.config import ModelConfig, attn_static
+from repro.models.layers import (ParallelContext, apply_rope, col_slice,
+                                 dense, fused_dense, rms_norm_local,
+                                 rope_tables)
+from repro.models.moe import moe_block
+from repro.models.ssm import mamba_decode_step
+from repro.models.transformer import (_norm, apply_layer, embed_tokens,
+                                      forward, mlp_apply, param_specs)
+from repro.partition import DATA, MODEL, POD, MeshPlan
+from repro.train.step import make_pctx
+
+
+# ---------------------------------------------------------------------------
+# Cache specs.
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, plan: MeshPlan, batch: int, s_max: int,
+                mode: str) -> Any:
+    """ShapeDtypeStruct pytree for the decode cache (dry-run + init)."""
+    q, r = plan.grid_q, plan.grid_r
+    n_pes = q * r
+    G = cfg.n_groups()
+    dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
+    has_attn = any(mixer == "attn" for mixer, _ in cfg.pattern())
+    kvh = cfg.kv_stored(r)[0] // r if has_attn else 0
+    hd = cfg.hd() if has_attn else 0
+    dt = cfg.compute_dtype
+
+    if mode == "batched":
+        assert batch % (dshards * q) == 0, (batch, dshards, q)
+        # boundary dim 2 is sharded over DATA: global-over-data size batch//q
+        kv_shape = (G, n_pes, batch // q, s_max, kvh, hd)
+    elif mode == "gemv":
+        # weights-stationary decode: batch over DATA only, cache sequence
+        # sharded over grid ROWS (flash-decode merge over rows)
+        assert batch % dshards == 0, (batch, dshards)
+        kv_shape = (G, n_pes, batch, s_max // q, kvh, hd)
+    else:  # longctx: sequence-sharded cache over (data x rows), batch repl.
+        s_loc = s_max // (dshards * q)
+        kv_shape = (G, n_pes, batch, s_loc, kvh, hd)
+
+    entries = []
+    for (mixer, ffn) in cfg.pattern():
+        if mixer == "attn":
+            e = {
+                "k": jax.ShapeDtypeStruct(kv_shape, dt),
+                "v": jax.ShapeDtypeStruct(kv_shape, dt),
+            }
+            if cfg.enc_layers:   # whisper: cached encoder cross K/V
+                cross = (G, n_pes, kv_shape[2], cfg.enc_seq, kvh, hd)
+                e["cross_k"] = jax.ShapeDtypeStruct(cross, dt)
+                e["cross_v"] = jax.ShapeDtypeStruct(cross, dt)
+            entries.append(e)
+        else:
+            H_loc = cfg.ssm_heads // r
+            conv_ch = (cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) // r
+            b_here = kv_shape[2]
+            entries.append({
+                "conv": jax.ShapeDtypeStruct(
+                    (G, n_pes, b_here, cfg.conv_kernel - 1, conv_ch), dt),
+                "ssm": jax.ShapeDtypeStruct(
+                    (G, n_pes, b_here, H_loc, cfg.ssm_state, cfg.ssm_headdim),
+                    jnp.float32),
+            })
+    return entries
+
+
+def cache_pspecs(cfg: ModelConfig, mode: str, data_axes) -> Any:
+    lead = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    batch_ax = lead if mode in ("batched", "gemv") else None
+
+    def spec_for(leaf_name):
+        return P(None, MODEL, batch_ax)
+
+    entries = []
+    for (mixer, ffn) in cfg.pattern():
+        if mixer == "attn":
+            e = {"k": P(None, MODEL, batch_ax), "v": P(None, MODEL, batch_ax)}
+            if cfg.enc_layers:
+                e["cross_k"] = P(None, MODEL, batch_ax)
+                e["cross_v"] = P(None, MODEL, batch_ax)
+            entries.append(e)
+        else:
+            entries.append({"conv": P(None, MODEL, batch_ax),
+                            "ssm": P(None, MODEL, batch_ax)})
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Decode-mode attention.
+# ---------------------------------------------------------------------------
+
+def _attn_decode_batched(pctx, p, x, cfg, kc, vc, pos):
+    """x (B_pe, 1, D_loc); kc/vc (B_pe, S_max, kvh_loc, hd) local; pos traced.
+    Returns (y, new kc, new vc).  Zero-communication attention."""
+    B = x.shape[0]
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hkv_loc = cfg.n_kv_stored // pctx.r
+    hd = cfg.head_dim
+    biases = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+    q, k, v = fused_dense(pctx, x, [p["wq"], p["wk"], p["wv"]], biases=biases)
+    q = q.reshape(B, 1, hq_loc, hd)
+    k = k.reshape(B, 1, hkv_loc, hd)
+    v = v.reshape(B, 1, hkv_loc, hd)
+    if cfg.qk_norm:
+        q = rms_norm_local(q, p["q_norm"])
+        k = rms_norm_local(k, p["k_norm"])
+    cos, sin = rope_tables(jnp.reshape(pos, (1,)), hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+    kv_pos = jnp.arange(kc.shape[1])
+    part = attention_partial(
+        q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), kv_pos=kv_pos,
+        q_pos=jnp.reshape(pos, (1,)))
+    out = (part.acc / jnp.maximum(part.l, 1e-30)[..., None])
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
+    y = dense(pctx, out.astype(x.dtype), p["wo"])
+    return y, kc, vc
+
+
+def _attn_decode_longctx(pctx, p, x, cfg, kc, vc, pos, shard_offset,
+                         reduce_data: bool = True):
+    """x (B, 1, D_loc) replicated over rows (+data); cache seq-sharded:
+    kc/vc (B, S_loc, kvh_loc, hd), this PE covering global positions
+    [shard_offset, shard_offset + S_loc).  Flash-decoding LSE merge."""
+    B = x.shape[0]
+    grid = pctx.grid
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hkv_loc = cfg.n_kv_stored // pctx.r
+    hd = cfg.head_dim
+    q, k, v = fused_dense(pctx, x, [p["wq"], p["wk"], p["wv"]])
+    q = q.reshape(B, 1, hq_loc, hd)
+    k = k.reshape(B, 1, hkv_loc, hd)
+    v = v.reshape(B, 1, hkv_loc, hd)
+    if cfg.qk_norm:
+        q = rms_norm_local(q, p["q_norm"])
+        k = rms_norm_local(k, p["k_norm"])
+    cos, sin = rope_tables(jnp.reshape(pos, (1,)), hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    # write the new KV into its owner shard (masked dynamic update)
+    S_loc = kc.shape[1]
+    local_pos = jnp.clip(pos - shard_offset, 0, S_loc - 1)
+    mine = (pos >= shard_offset) & (pos < shard_offset + S_loc)
+    k_old = lax.dynamic_slice_in_dim(kc, local_pos, 1, axis=1)
+    v_old = lax.dynamic_slice_in_dim(vc, local_pos, 1, axis=1)
+    k_new = jnp.where(mine, k.astype(kc.dtype), k_old)
+    v_new = jnp.where(mine, v.astype(vc.dtype), v_old)
+    kc = lax.dynamic_update_slice_in_dim(kc, k_new, local_pos, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(vc, v_new, local_pos, axis=1)
+    kv_pos = shard_offset + jnp.arange(S_loc)
+    part = attention_partial(
+        q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=jnp.reshape(pos, (1,)))
+
+    # reduce over grid ROWS (+ the data axes when the cache shards there):
+    def reduce_max(t):
+        groups = [[i * grid.r + j for i in range(grid.q)]
+                  for j in range(grid.r)]
+        t = lax.pmax(t, grid.axis, axis_index_groups=groups)
+        if reduce_data:
+            for ax in pctx.data_axes:
+                t = lax.pmax(t, ax)
+        return t
+
+    def reduce_sum(t):
+        t = grid.psum_rows(t)
+        if reduce_data:
+            for ax in pctx.data_axes:
+                t = lax.psum(t, ax)
+        return t
+
+    out = combine_partials(part, reduce_max, reduce_sum)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
+    y = dense(pctx, out.astype(x.dtype), p["wo"])
+    return y, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Decode layer + step.
+# ---------------------------------------------------------------------------
+
+def _cross_decode(pctx, p, x, cfg, ck, cv):
+    """Cross attention against the cached encoder K/V (whisper decode).
+    ck/cv (B_pe, S_enc, kvh_loc, hd) fully local; non-causal."""
+    B = x.shape[0]
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hd = cfg.head_dim
+    q = dense(pctx, x, p["wq"]).reshape(B, 1, hq_loc, hd)
+    S_enc = ck.shape[1]
+    part = attention_partial(
+        q.transpose(0, 2, 1, 3), ck.transpose(0, 2, 1, 3),
+        cv.transpose(0, 2, 1, 3), kv_pos=jnp.zeros((S_enc,), jnp.int32),
+        q_pos=jnp.zeros((1,), jnp.int32))   # q_pos >= kv_pos always: no mask
+    out = (part.acc / jnp.maximum(part.l, 1e-30)[..., None])
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
+    return dense(pctx, out.astype(x.dtype), p["wo"])
+
+
+def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode):
+    ast = attn_static(cfg, pctx.r) if mixer == "attn" else None
+    if mixer == "attn":
+        h = _norm(pctx, cfg, p["norm1"], x)
+        if mode == "batched":
+            h, kc, vc = _attn_decode_batched(pctx, p["mixer"], h, ast,
+                                             cache["k"], cache["v"], pos)
+        else:
+            h, kc, vc = _attn_decode_longctx(pctx, p["mixer"], h, ast,
+                                             cache["k"], cache["v"], pos,
+                                             shard_offset,
+                                             reduce_data=(mode == "longctx"))
+        x = x + h
+        new_cache = {"k": kc, "v": vc}
+    else:
+        h = _norm(pctx, cfg, p["norm1"], x)
+        h, (conv, ssm) = mamba_decode_step(pctx, p["mixer"], h,
+                                           (cache["conv"], cache["ssm"]), cfg)
+        x = x + h
+        new_cache = {"conv": conv, "ssm": ssm}
+    if "cross" in p:
+        h = _norm(pctx, cfg, p["norm_cross"], x)
+        x = x + _cross_decode(pctx, p["cross"], h, ast,
+                              cache["cross_k"], cache["cross_v"])
+        new_cache = dict(new_cache, cross_k=cache["cross_k"],
+                         cross_v=cache["cross_v"])
+    if ffn == "mlp":
+        h = _norm(pctx, cfg, p["norm2"], x)
+        x = x + mlp_apply(pctx, cfg, p["ffn"], h)
+    elif ffn == "moe":
+        h = _norm(pctx, cfg, p["norm2"], x)
+        y, _ = moe_block(pctx, p["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def _embed_decode(pctx, embed_blk, tokens, mode, compute_dtype):
+    """tokens: batched -> (B_data,) replicated over model (each row takes its
+    slice); longctx -> (B,) replicated everywhere."""
+    vb = embed_blk[0]
+    V_loc = vb.shape[0]
+    grid = pctx.grid
+    i, _ = grid.my_coords()
+    loc = tokens - i * V_loc
+    hit = (loc >= 0) & (loc < V_loc)
+    part = jnp.take(vb, jnp.clip(loc, 0, V_loc - 1), axis=0)
+    part = jnp.where(hit[..., None], part, 0).astype(compute_dtype)
+    if mode == "batched":
+        # sum over vocab row-blocks AND scatter the batch dim to rows
+        return grid.reduce_scatter_rows(part, axis=0)[:, None, :]
+    return grid.psum_rows(part)[:, None, :]     # gemv/longctx: repl. rows
+
+
+def _last_logits(pctx, lm_head_blk, x, gather_rows: bool):
+    """x (B_loc, 1, D_loc) -> logits (B, 1, V) gathered to a boundary-clean
+    layout (full vocab per PE; batch re-gathered over rows when the rows
+    shard it).  The (rows x cols) 2D use of the flat model axis cannot cross
+    the shard_map boundary in one PartitionSpec."""
+    logits = dense(pctx, x, lm_head_blk, out_dtype=jnp.float32)
+    logits = pctx.grid.all_gather_cols(logits, axis=-1)     # full vocab
+    if gather_rows:
+        logits = pctx.grid.all_gather_rows(logits, axis=0)  # full local batch
+    return logits
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+                     batch: int, s_max: int, mode: str = "batched",
+                     tp_strategy: Optional[str] = None):
+    """serve_step(params, cache, tokens, pos) -> (logits, cache).
+
+    ``mode="batched"``: tokens (B,) sharded over data; Cannon projections.
+    ``mode="longctx"``: tokens (B,) replicated; gemv2d projections over
+    UNSKEWED weights (pass tp_strategy="allgather"-storage params).
+    """
+    if tp_strategy is None:
+        tp_strategy = "cannon" if mode == "batched" else "gemv"
+    act_layout = "blocked" if mode == "batched" else "repl_rows"
+    pctx = make_pctx(plan, "cannon" if mode == "batched" else "allgather",
+                     remat=False, compute_dtype=cfg.compute_dtype)
+    pctx = dataclasses.replace(pctx, act_layout=act_layout,
+                               preskewed=(mode == "batched"))
+    # "gemv": weights stationary (unskewed, gemv2d), batch over DATA only,
+    # cache sequence-sharded over grid rows — kills the per-step weight
+    # ppermute traffic of Cannon-style decode (EXPERIMENTS.md §Perf).
+    specs = param_specs(cfg, plan.grid_q, plan.grid_r,
+                        preskew=pctx.preskewed)
+    q, r = plan.grid_q, plan.grid_r
+    dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
+    pattern = cfg.pattern()
+
+    def body(params, cache, tokens, pos):
+        grid = pctx.grid
+        i, _ = grid.my_coords()
+        x = _embed_decode(pctx, params["embed"], tokens, mode,
+                          cfg.compute_dtype)
+        if mode == "longctx":
+            # this PE's cache shard covers [shard_offset, +S_loc)
+            didx = jnp.zeros((), jnp.int32)
+            for ax in pctx.data_axes:
+                didx = didx * lax.axis_size(ax) + lax.axis_index(ax)
+            s_loc = s_max // (dshards * q)
+            shard_offset = (didx * q + i) * s_loc
+        elif mode == "gemv":
+            shard_offset = i * (s_max // q)    # rows only; batch over data
+        else:
+            shard_offset = 0
+
+        def group_body(carry, xs):
+            x = carry
+            group_params, group_cache = xs
+            new_caches = []
+            for posn, (mixer, ffn) in enumerate(pattern):
+                x, nc = _decode_layer(pctx, cfg, mixer, ffn,
+                                      group_params[posn], x,
+                                      group_cache[posn], pos, shard_offset,
+                                      mode)
+                new_caches.append(nc)
+            return x, new_caches
+
+        # strip the n_pes dim (shard_map gives local (G, 1, ...) leaves)
+        local_cache = jax.tree.map(lambda c: c[:, 0], cache)
+        x, new_cache = lax.scan(group_body, x,
+                                (params["layers"], local_cache))
+        x = _norm(pctx, cfg, params["final_norm"], x)
+        logits = _last_logits(pctx, params["lm_head"], x,
+                              gather_rows=(mode == "batched"))
+        new_cache = jax.tree.map(lambda c: c[:, None], new_cache)
+        return logits, new_cache
+
+    pspecs = pm.param_pspecs(specs)
+    cpspecs = cache_pspecs(cfg, mode, pctx.data_axes)
+    lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
+        else pctx.data_axes[0]
+    tok_spec = P() if mode == "longctx" else P(lead)
+    logit_spec = P() if mode == "longctx" else P(lead, None, None)
+
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, cpspecs, tok_spec, P()),
+        out_specs=(logit_spec, cpspecs),
+        check_vma=False)
+    return jax.jit(mapped, donate_argnums=(1,)), specs, pctx
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+                 tp_strategy: str = "cannon",
+                 extra_batch_keys: Tuple[str, ...] = ()):
+    """prefill(params, batch) -> last-position logits (B, 1, V_loc blocked).
+
+    Runs the full training-style forward (Cannon path, flash attention) and
+    extracts the final position's logits; cache export for decode handoff is
+    a reshard pass (batched mode) documented in DESIGN.md.
+    """
+    pctx = make_pctx(plan, tp_strategy, remat=False,
+                     compute_dtype=cfg.compute_dtype)
+    specs = param_specs(cfg, plan.grid_q, plan.grid_r, preskew=pctx.preskewed)
+
+    def body(params, batch):
+        x, aux, caches = forward(pctx, cfg, params, batch,
+                                 collect_cache=False)
+        grid = pctx.grid
+        i, _ = grid.my_coords()
+        last = x[:, -1:, :]
+        last = grid.psum_rows(
+            jnp.where(i == pctx.q - 1, last, jnp.zeros_like(last)))
+        # `last` is row-replicated: Cannon treats it as 4 stacked copies of
+        # the M block — redundant but correct; vocab gathered for a clean
+        # boundary layout.
+        return _last_logits(pctx, params["lm_head"], last, gather_rows=False)
+
+    pspecs = pm.param_pspecs(specs)
+    lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
+        else pctx.data_axes[0]
+    example = {k: 0 for k in ("tokens",) + tuple(extra_batch_keys)}
+    bspec = jax.tree.map(lambda _: P(lead), example)
+    mapped = jax.shard_map(body, mesh=mesh, in_specs=(pspecs, bspec),
+                           out_specs=P(lead, None, None), check_vma=False)
+    return jax.jit(mapped), specs, pctx

@@ -1,0 +1,1 @@
+from repro.train.step import make_loss_fn, make_pctx, make_train_step, reduce_grads

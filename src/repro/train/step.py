@@ -1,0 +1,235 @@
+"""Training step factory: shard_map(grad(loss) -> reduce -> AdamW) under jit.
+
+The whole step is one offloaded "kernel" in the paper's sense: the host
+enqueues it; inside, the SHMEM grid program runs forward, backward (autodiff
+through every ppermute/psum), gradient reduction, and the optimizer — no
+host round-trips.
+
+Gradient reduction rules (see models/params.ParamSpec):
+  * blocked / vocab / expert params: disjoint per-PE shards -> psum over the
+    DATA axes only; kv column replicas additionally summed over their column
+    groups (true tied-GQA semantics).
+  * replicated params (norms, biases, router, conv, A): every PE computes a
+    partial -> psum over MODEL + DATA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.shmem import ShmemGrid
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.models.layers import ParallelContext
+from repro.models.transformer import loss_fn, param_specs
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.optim.compress import compressed_allreduce
+from repro.partition import DATA, MODEL, POD, MeshPlan
+
+
+def make_pctx(plan: MeshPlan, tp_strategy: str = "cannon",
+              remat: bool = True, compute_dtype=jnp.bfloat16,
+              data_axes: Optional[Tuple[str, ...]] = None) -> ParallelContext:
+    grid = ShmemGrid(MODEL, plan.grid_q, plan.grid_r)
+    if data_axes is None:
+        data_axes = ((POD, DATA) if plan.has_pod and plan.pp_stages == 1
+                     else (DATA,))
+    # Pre-skewed weight storage is the Cannon-only optimization (the paper's
+    # "read in pre-skewed" remark); baselines store natural blocks.
+    # cannon_opt additionally keeps the residual stream permanently skewed.
+    return ParallelContext(
+        grid=grid, data_axes=tuple(data_axes), tp_strategy=tp_strategy,
+        preskewed=tp_strategy in ("cannon", "cannon_opt"),
+        act_layout="skewed" if tp_strategy == "cannon_opt" else "blocked",
+        compute_dtype=compute_dtype, remat=remat)
+
+
+def _replica_groups(q: int, r: int, rep: int, skewed: bool):
+    """PE groups whose blocks hold the SAME logical (K_a, kv-head-g) tile.
+
+    Unskewed: block (i, j) = W[K_i, N_{j//rep}] -> same-row cols tie.
+    Pre-skewed: block (i, j) = W[K_{(i+j)%q}, N_{j//rep}] -> the col-j replica
+    of K_a sits at row (a - j) % q.
+    """
+    groups = []
+    for a in range(q):
+        for g in range(r // rep):
+            cols = [g * rep + t for t in range(rep)]
+            if skewed:
+                groups.append([((a - j) % q) * r + j for j in cols])
+            else:
+                groups.append([a * r + j for j in cols])
+    return groups
+
+
+def reduce_grads(pctx: ParallelContext, specs, grads, resid=None,
+                 n_data: int = 0):
+    """Apply the per-layout reduction rules; returns (grads, sq-norm[,resid]).
+
+    ``resid``: error-feedback residual tree -> the DATA-axis all-reduce of
+    model-sharded params runs int8-on-the-wire (optim/compress) instead of a
+    bf16 psum — the distributed-optimization trick for comm-bound training."""
+    grid = pctx.grid
+    is_spec = lambda x: isinstance(x, pm.ParamSpec)
+    flat_specs_, tdef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_r = tdef.flatten_up_to(resid) if resid is not None \
+        else [None] * len(flat_g)
+
+    out_g, out_r = [], []
+    for g, s, rd in zip(flat_g, flat_specs_, flat_r):
+        layout = dict(s.meta).get("layout", "replicated")
+        if layout == "replicated" or rd is None:
+            for ax in pctx.data_axes:
+                g = lax.psum(g, ax)
+            out_r.append(rd)
+        else:
+            g, rd_new = compressed_allreduce(g, rd.astype(jnp.float32),
+                                             DATA, n_data)
+            out_r.append(rd_new.astype(rd.dtype))
+            for ax in pctx.data_axes:          # pod (if any): exact psum
+                if ax != DATA:
+                    g = lax.psum(g, ax)
+        if layout == "replicated":
+            g = lax.psum(g, grid.axis)
+        elif s.col_replicas > 1:
+            groups = _replica_groups(grid.q, grid.r, s.col_replicas,
+                                     skewed=dict(s.meta).get("skew", False))
+            g = lax.psum(g, grid.axis, axis_index_groups=groups)
+        out_g.append(g)
+    grads = tdef.unflatten(out_g)
+    new_resid = tdef.unflatten(out_r) if resid is not None else None
+
+    # Global grad norm: blocked shards are disjoint -> psum over the model
+    # axis; replicated leaves identical everywhere -> count once.
+    sq_b, sq_r = jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+    flat_specs = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, pm.ParamSpec))
+    flat_grads = jax.tree.leaves(grads)
+    for g, s in zip(flat_grads, flat_specs):
+        contrib = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        if dict(s.meta).get("layout", "replicated") == "replicated":
+            sq_r += contrib
+        else:
+            # col replicas hold identical (summed) grads — count one copy
+            sq_b += contrib / s.col_replicas
+    sq = lax.psum(sq_b, grid.axis) + sq_r
+    if resid is not None:
+        return grads, jnp.sqrt(sq), new_resid
+    return grads, jnp.sqrt(sq)
+
+
+def decay_mask(specs):
+    """Weight decay on matrices only (no norms/biases/A/scalars)."""
+    def m(s: pm.ParamSpec):
+        return dict(s.meta).get("layout", "replicated") != "replicated" \
+            or len(s.shape) >= 2 and s.init == "normal"
+    return jax.tree.map(m, specs, is_leaf=lambda x: isinstance(x, pm.ParamSpec))
+
+
+def batch_pspec(pctx: ParallelContext, batch_tree) -> Dict[str, P]:
+    lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
+        else pctx.data_axes[0]
+    return jax.tree.map(lambda _: P(lead), batch_tree)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    tp_strategy: str = "cannon", remat: bool = True,
+                    microbatches: int = 1, donate: bool = True,
+                    grad_compress: bool = False,
+                    extra_batch_keys: Tuple[str, ...] = ()):
+    """Returns (step_fn, specs, pctx).  step_fn(params, opt_state, batch) ->
+    (params, opt_state, metrics); all arguments jit-sharded."""
+    pctx = make_pctx(plan, tp_strategy, remat, cfg.compute_dtype)
+    storage = "opt" if tp_strategy == "cannon_opt" else pctx.preskewed
+    specs = param_specs(cfg, plan.grid_q, plan.grid_r, preskew=storage)
+    dmask = decay_mask(specs)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda ps: loss_fn(pctx, cfg, ps, batch), has_aux=True)(params)
+
+    def step_body(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss_sum), _ = lax.scan(acc, (zero, jnp.zeros(())), mbatch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"ce_loss": loss, "aux": jnp.zeros(()),
+                       "n_tokens": jnp.zeros((), jnp.int32)}
+        if grad_compress:
+            grads, gnorm, new_resid = reduce_grads(
+                pctx, specs, grads, resid=opt_state["resid"],
+                n_data=plan.data_size)
+            opt_state = dict(opt_state, resid=new_resid)
+        else:
+            grads, gnorm = reduce_grads(pctx, specs, grads)
+        adam_state = {k: opt_state[k] for k in ("step", "m", "v")}
+        params, adam_state, om = apply_updates(
+            params, grads, adam_state, opt_cfg, decay_mask=dmask,
+            grad_norm=gnorm)
+        opt_state = dict(opt_state, **adam_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    pspecs = pm.param_pspecs(specs)
+    from repro.optim.adamw import state_pspecs
+    opt_pspecs = state_pspecs(pspecs, opt_cfg)
+    if grad_compress:
+        opt_pspecs = dict(opt_pspecs, resid=pspecs)
+    example = {k: 0 for k in ("tokens", "labels") + tuple(extra_batch_keys)}
+    bspec = batch_pspec(pctx, example)
+
+    mapped = jax.shard_map(
+        step_body, mesh=mesh,
+        in_specs=(pspecs, opt_pspecs, bspec),
+        out_specs=(pspecs, opt_pspecs, jax.tree.map(lambda _: P(), {
+            "ce_loss": 0, "loss": 0, "grad_norm": 0, "lr": 0, "aux": 0,
+            "n_tokens": 0})),
+        check_vma=False)
+    fn = jax.jit(mapped, donate_argnums=(0, 1) if donate else ())
+    return fn, specs, pctx
+
+
+def make_loss_fn(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+                 tp_strategy: str = "cannon", remat: bool = False,
+                 extra_batch_keys: Tuple[str, ...] = ()):
+    """Forward-only (eval / equivalence tests)."""
+    pctx = make_pctx(plan, tp_strategy, remat, cfg.compute_dtype)
+    storage = "opt" if tp_strategy == "cannon_opt" else pctx.preskewed
+    specs = param_specs(cfg, plan.grid_q, plan.grid_r, preskew=storage)
+    pspecs = pm.param_pspecs(specs)
+    example = {k: 0 for k in ("tokens", "labels") + tuple(extra_batch_keys)}
+    bspec = batch_pspec(pctx, example)
+
+    def body(params, batch):
+        loss, metrics = loss_fn(pctx, cfg, params, batch)
+        return loss, metrics
+
+    mapped = jax.shard_map(body, mesh=mesh, in_specs=(pspecs, bspec),
+                           out_specs=(P(), jax.tree.map(lambda _: P(), {
+                               "ce_loss": 0, "aux": 0, "n_tokens": 0})),
+                           check_vma=False)
+    return jax.jit(mapped), specs, pctx

@@ -1,0 +1,47 @@
+"""Shared fixtures: a 16-way host-device mesh for SHMEM-grid tests.
+
+Device count must be pinned before the first jax import in the test
+process; pytest.ini sets XLA_FLAGS via the env section — but to stay
+self-contained we set it here defensively (no-op if jax already loaded with
+enough devices).
+"""
+
+import os
+
+# Must happen before jax import (conftest is imported first by pytest).
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.partition import DATA, MODEL, MeshPlan  # noqa: E402
+
+
+def _mesh(data: int):
+    return jax.make_mesh((data, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def mesh16():
+    if len(jax.devices()) < 16:
+        pytest.skip("needs 16 host devices")
+    return _mesh(1)
+
+
+@pytest.fixture(scope="session")
+def mesh32():
+    if len(jax.devices()) < 32:
+        pytest.skip("needs 32 host devices")
+    return _mesh(2)
+
+
+@pytest.fixture(scope="session")
+def plan16():
+    return MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+
+
+@pytest.fixture(scope="session")
+def plan32():
+    return MeshPlan((DATA, MODEL), (2, 16), 4, 4)

@@ -1,0 +1,50 @@
+"""Elastic restart: checkpoints restore across mesh changes + grid re-block."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.ckpt.checkpoint import reblock_params
+from repro.core.cannon import block_2d, unblock_2d
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.models.transformer import param_specs
+
+
+def test_reblock_roundtrip_4x4_to_2x8_equivalent_global():
+    """Re-gridding preserves the GLOBAL weight exactly."""
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))
+    b44 = block_2d(W, 4, 4, skew_b=True)
+    # 4x4 -> 2x8 natural (different grid => different skew geometry: reblock
+    # goes through the global form, so any->any works)
+    cfgspec = pm.blocked2d(32, 32, 4, 4, dtype=jnp.float32, skew=True)
+    out = reblock_params({"w": b44}, {"w": cfgspec}, 4, 4, 2, 8)["w"]
+    back = unblock_2d(out, 2, 8, skew_b=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(W), atol=1e-6)
+
+
+def test_checkpoint_restore_across_data_size(tmp_path, mesh16, mesh32):
+    """Save on data=1 mesh, restore onto data=2 — stored form is
+    mesh-agnostic (this is the elastic-scaling path)."""
+    from jax.sharding import NamedSharding
+    cfg = ModelConfig(name="t", family="dense", d_model=64, n_layers=2,
+                      n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    specs = param_specs(cfg, 4, 4)
+    params = pm.init_params(specs, seed=0)
+    pspecs = pm.param_pspecs(specs)
+    p16 = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh16, s)),
+        params, pspecs)
+    ckpt.save(str(tmp_path), 7, {"params": p16})
+    # restore onto the bigger mesh
+    sh32 = jax.tree.map(lambda s: NamedSharding(mesh32, s), pspecs)
+    step, state = ckpt.restore(str(tmp_path), like={"params": p16},
+                               shardings={"params": sh32})
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cannon import block_2d, unblock_2d
+from repro.core.epiphany_model import volumes
+from repro.core.shmem import ShmemGrid
+from repro.models.attention import chunked_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.optim.adamw import _dequantize, _quantize
+
+S = settings(deadline=None, max_examples=25)
+
+
+@S
+@given(q=st.integers(2, 5), r=st.integers(2, 5),
+       kb=st.integers(1, 4), nb=st.integers(1, 4),
+       skew=st.booleans(), seed=st.integers(0, 100))
+def test_block_unblock_roundtrip(q, r, kb, nb, skew, seed):
+    if skew and q != r:
+        return  # skewed storage defined on square grids
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((q * kb, r * nb)).astype(np.float32)
+    blocks = block_2d(jnp.asarray(w), q, r, skew_b=skew)
+    back = unblock_2d(blocks, q, r, skew_b=skew)
+    np.testing.assert_array_equal(np.asarray(back), w)
+
+
+@S
+@given(q=st.integers(2, 6), amount=st.integers(-7, 7))
+def test_shift_pairs_are_bijections(q, amount):
+    g = ShmemGrid("m", q, q)
+    for pairs in (g.row_shift_pairs(amount), g.col_shift_pairs(amount),
+                  g.skew_a_pairs(), g.skew_b_pairs(), g.transpose_pairs()):
+        srcs = [s for s, _ in pairs]
+        dsts = [d for _, d in pairs]
+        assert sorted(srcs) == list(range(q * q))
+        assert sorted(dsts) == list(range(q * q))
+
+
+@S
+@given(q=st.integers(2, 5))
+def test_skew_unskew_inverse(q):
+    g = ShmemGrid("m", q, q)
+    def compose(p1, p2):
+        m1 = dict(p1)
+        m2 = dict(p2)
+        return {s: m2[m1[s]] for s in m1}
+    ident = {i: i for i in range(q * q)}
+    assert compose(g.skew_a_pairs(), g.unskew_a_pairs()) == ident
+    assert compose(g.skew_b_pairs(), g.unskew_b_pairs()) == ident
+
+
+@S
+@given(n=st.sampled_from([16, 32, 64, 128, 256]), q=st.sampled_from([2, 4]))
+def test_epiphany_volume_invariants(n, q):
+    """The paper's mechanism as an invariant: the hybrid model always moves
+    q x fewer off-chip read bytes, at the cost of NoC traffic; FLOPs equal."""
+    if n % q:
+        return
+    vo = volumes(n, q, "opencl")
+    vh = volumes(n, q, "hybrid")
+    assert vo.flops == vh.flops
+    assert vo.noc_bytes == 0 and vh.noc_bytes > 0
+    write = 4.0 * n * n
+    assert (vo.offchip_bytes - write) == q * (vh.offchip_bytes - write)
+
+
+@S
+@given(seed=st.integers(0, 1000), blocks=st.integers(1, 8))
+def test_quantize_bounded_error(seed, blocks):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(blocks * 100).astype(np.float32)) * \
+        float(rng.uniform(0.1, 100))
+    q, s = _quantize(x)
+    y = _dequantize(q, s, x.shape)
+    scale = float(jnp.abs(x).max())
+    assert float(jnp.abs(y - x).max()) <= scale / 127.0 + 1e-6
+
+
+@settings(deadline=None, max_examples=10)
+@given(sq=st.sampled_from([32, 64]), skv=st.sampled_from([64, 128]),
+       hq=st.sampled_from([2, 4]), group=st.sampled_from([1, 2]),
+       bk=st.sampled_from([16, 32, 1000]), off=st.sampled_from([0, 64]),
+       seed=st.integers(0, 50))
+def test_chunked_attention_matches_ref(sq, skv, hq, group, bk, off, seed):
+    if off + sq > skv:
+        off = skv - sq
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    hkv = hq // group
+    q = jax.random.normal(ks[0], (1, hq, sq, 16))
+    k = jax.random.normal(ks[1], (1, hkv, skv, 16))
+    v = jax.random.normal(ks[2], (1, hkv, skv, 16))
+    out = chunked_attention(q, k, v, q_offset=off, causal=True, block_kv=bk)
+    ref = attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
