@@ -8,7 +8,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 # One function per paper table/figure. Prints ``name,value,derived`` CSV.
-from benchmarks import comm_volume, kernel_bench, roofline, table1_cannon  # noqa: E402
+from benchmarks import (comm_volume, kernel_bench, roofline,  # noqa: E402
+                        serve_throughput, table1_cannon)
 
 
 def main() -> None:
@@ -23,6 +24,8 @@ def main() -> None:
     comm_volume.run(report)
     # Kernel-level: chunked attention / SSD vs references, VMEM structure
     kernel_bench.run(report)
+    # Serving engine: continuous-batching throughput from KernelEvent stats
+    serve_throughput.run(report)
     # Roofline terms from the dry-run artifacts (if present)
     rows = roofline.run(report)
     if rows:

@@ -66,3 +66,24 @@ for mode in ("batched", "gemv"):
 print("note: the two modes use different weight-storage skews, so the same"
       " seed yields different logical models — per-mode correctness vs the"
       " oracle is proven in tests/test_decode.py")
+
+# --- continuous-batching engine on the same model -------------------------
+# Mixed-length prompts served through the CommandQueue: one step executable
+# per batch bucket, per-slot positions, paged-KV admission (docs/serving.md).
+from repro.serve.engine import (EngineConfig, SamplingParams,  # noqa: E402
+                                build_engine, generate)
+
+eng = build_engine(cfg, mesh, plan,
+                   engine_cfg=EngineConfig(s_max=S_MAX, buckets=(1, 2, 4),
+                                           block_pos_stride=16), seed=0)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size,
+                        size=int(rng.integers(2, 9))).tolist()
+           for _ in range(6)]
+outs = generate(eng, prompts, SamplingParams(max_tokens=8))
+for c in outs[:3]:
+    print(f"engine {c.request_id}: prompt[{len(c.prompt)}] -> {c.tokens}")
+print(f"engine: {eng.stats.tokens_generated} tokens, "
+      f"{eng.queue.n_executables} executables "
+      f"(buckets {sorted(eng.kernel_events())}), "
+      f"{eng.throughput_tok_s():.1f} tok/s from KernelEvent stats")

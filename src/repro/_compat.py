@@ -1,0 +1,97 @@
+"""Compatibility shims for the pinned jax toolchain.
+
+The codebase is written against the current jax API surface; the baked-in
+toolchain may lag it.  ``install()`` (called from ``repro/__init__``) patches
+the handful of renamed/moved symbols we rely on so the same source runs on
+both.  Every shim is a no-op when the host jax already provides the symbol.
+
+Shimmed surface:
+  * ``jax.shard_map``              — moved from ``jax.experimental.shard_map``;
+                                     the ``check_vma`` kwarg was ``check_rep``.
+  * ``jax.sharding.AxisType``      — absent on older jax; meshes are Auto-only
+                                     there, so a placeholder enum suffices.
+  * ``jax.make_mesh(axis_types=)`` — older ``make_mesh`` lacks the kwarg (or
+                                     the function entirely); wrap/define it.
+  * ``pallas.tpu.CompilerParams``  — named ``TPUCompilerParams`` on older jax.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import numpy as np
+
+import jax
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_type_and_make_mesh()
+    _install_pallas_compiler_params()
+    _install_axis_size()
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, **kw):
+        if check_vma is not None and "check_rep" not in kw:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type_and_make_mesh() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    make_mesh = getattr(jax, "make_mesh", None)
+    if make_mesh is None:
+        def make_mesh(axis_shapes, axis_names, axis_types=None, *,
+                      devices=None):
+            n = int(np.prod(axis_shapes))
+            devs = np.asarray(devices if devices is not None
+                              else jax.devices()[:n]).reshape(axis_shapes)
+            return jax.sharding.Mesh(devs, axis_names)
+
+        jax.make_mesh = make_mesh
+    elif "axis_types" not in inspect.signature(make_mesh).parameters:
+        @functools.wraps(make_mesh)
+        def make_mesh_compat(*args, axis_types=None, **kw):
+            if len(args) > 2:       # positional axis_types on new signature
+                args = args[:2]
+            return make_mesh(*args, **kw)
+
+        jax.make_mesh = make_mesh_compat
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_pallas_compiler_params() -> None:
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except ImportError:  # pallas not built into this jax
+        return
+    if not hasattr(pltpu, "CompilerParams") and \
+            hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams

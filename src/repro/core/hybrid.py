@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import time
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Sequence
 
@@ -32,13 +33,29 @@ from repro.core.shmem import ShmemGrid
 
 @dataclasses.dataclass
 class KernelEvent:
-    """Profiling record for one enqueued kernel (cl_event analogue)."""
+    """Profiling record for one enqueued kernel (cl_event analogue).
+
+    Timestamps mirror OpenCL's CL_PROFILING_COMMAND_QUEUED/COMPLETE: the
+    queue stamps every enqueue with ``time.perf_counter()`` so host-side
+    throughput (tokens/sec in the serving engine) can be derived purely from
+    event records, without instrumenting the drive loop.
+    """
 
     name: str
     flops: float = 0.0
     bytes_accessed: float = 0.0
     collective_bytes: float = 0.0
     launches: int = 0
+    build_time_s: float = 0.0
+    first_enqueue_t: float = 0.0    # perf_counter at first enqueue (0 = never)
+    last_enqueue_t: float = 0.0     # perf_counter at latest enqueue
+    last_done_t: float = 0.0        # perf_counter at the finish() that drained it
+
+    @property
+    def active_span_s(self) -> float:
+        """Wall-clock span this kernel was being launched over."""
+        end = self.last_done_t or self.last_enqueue_t
+        return max(0.0, end - self.first_enqueue_t) if self.first_enqueue_t else 0.0
 
 
 class HybridKernel:
@@ -73,13 +90,26 @@ class CommandQueue:
         self.events: Dict[str, KernelEvent] = {}
         self._compiled: Dict[str, Any] = {}
         self._pending = []
+        self.max_depth = 0              # high-water mark of in-flight enqueues
+
+    @property
+    def depth(self) -> int:
+        """Number of enqueued-but-not-drained dispatches (queue occupancy)."""
+        return len(self._pending)
+
+    @property
+    def n_executables(self) -> int:
+        """Distinct compiled executables held by this queue."""
+        return len(self._compiled)
 
     def build(self, kernel: HybridKernel, *example_args) -> Any:
         """clBuildProgram: lower + compile for this mesh, record cost stats."""
+        t0 = time.perf_counter()
         fn = kernel.bind(self.mesh)
         lowered = fn.lower(*example_args)
         compiled = lowered.compile()
         ev = self.events.setdefault(kernel.name, KernelEvent(kernel.name))
+        ev.build_time_s += time.perf_counter() - t0
         try:
             cost = compiled.cost_analysis()
             cost = cost[0] if isinstance(cost, (list, tuple)) else cost
@@ -97,20 +127,26 @@ class CommandQueue:
         if kernel.name not in self._compiled:
             self.build(kernel, *args)
         out = self._compiled[kernel.name](*args)
-        self.events[kernel.name].launches += 1
-        self._pending.append(out)
+        ev = self.events[kernel.name]
+        ev.launches += 1
+        now = time.perf_counter()
+        if not ev.first_enqueue_t:
+            ev.first_enqueue_t = now
+        ev.last_enqueue_t = now
+        self._pending.append((kernel.name, out))
+        self.max_depth = max(self.max_depth, len(self._pending))
         return out
 
     def finish(self):
         """clFinish: block until all enqueued work completes."""
-        for out in self._pending:
+        drained = set()
+        for name, out in self._pending:
             jax.block_until_ready(out)
+            drained.add(name)
         self._pending.clear()
-
-
-_COLLECTIVE_RE = re.compile(
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?(?:\.\d+)?\s*\(")
+        now = time.perf_counter()
+        for name in drained:
+            self.events[name].last_done_t = now
 
 
 def _shape_bytes(shape_str: str) -> float:

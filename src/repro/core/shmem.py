@@ -229,7 +229,6 @@ class ShmemGrid:
 
     def broadcast_from(self, x: jax.Array, root: int) -> jax.Array:
         """shmem_broadcast from flat PE ``root`` to all PEs."""
-        pairs = [(root, pe) for pe in range(self.n_pes)]
         # ppermute requires a permutation (each dst once); broadcast is done as
         # select + psum instead (cheap for small x) to stay a single collective.
         mask = (self.my_pe() == root).astype(x.dtype)

@@ -1,8 +1,12 @@
 """Serving launcher: batched greedy decoding with the SHMEM-grid server.
 
-Example:
+Example (single fixed batch):
   XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --tokens 32
+
+With ``--engine`` the same model is served through the continuous-batching
+engine (mixed-length workload, bucketed executables, paged-KV admission —
+see docs/serving.md).
 """
 
 from __future__ import annotations
@@ -32,6 +36,11 @@ def main():
     ap.add_argument("--s-max", type=int, default=64)
     ap.add_argument("--mode", default="gemv",
                     choices=["batched", "gemv", "longctx"])
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a mixed-length workload through the "
+                         "continuous-batching engine")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="workload size for --engine")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -40,6 +49,12 @@ def main():
                          "tests/test_decode.py for the full harness")
     mesh = make_smoke_mesh(data=1)
     plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+
+    if args.engine:
+        if args.mode != "gemv":
+            print(f"note: --engine serves via the per-slot gemv decode "
+                  f"layout; --mode {args.mode} ignored")
+        return _main_engine(cfg, mesh, plan, args)
 
     step, specs, pctx = make_decode_step(
         cfg, mesh, plan, batch=args.batch, s_max=args.s_max, mode=args.mode)
@@ -73,6 +88,30 @@ def main():
           f"({dt*1e3:.1f} ms/token on host CPU)")
     for b in range(min(args.batch, 2)):
         print(f"  seq[{b}]: {seqs[b][:16].tolist()} ...")
+
+
+def _main_engine(cfg, mesh, plan, args):
+    from repro.serve.engine import (EngineConfig, SamplingParams,
+                                    build_engine, generate)
+    s_max = -(-max(args.s_max, args.tokens + 12) // 4) * 4  # gemv: s_max % q
+    buckets = tuple(b for b in (1, 2, 4, 8) if b <= max(args.batch, 1))
+    eng = build_engine(cfg, mesh, plan, seed=0,
+                       engine_cfg=EngineConfig(s_max=s_max, buckets=buckets))
+    rng = np.random.default_rng(0)
+    vocab = min(cfg.vocab_size, 256)
+    prompts = [rng.integers(0, vocab,
+                            size=int(rng.integers(2, 12))).tolist()
+               for _ in range(args.requests)]
+    outs = generate(eng, prompts, SamplingParams(max_tokens=args.tokens))
+    for c in outs[:4]:
+        print(f"  {c.request_id}: prompt[{len(c.prompt)}] -> "
+              f"{c.tokens[:12]} ({c.finish_reason})")
+    ev = eng.kernel_events()
+    print(f"served {len(outs)} requests / {eng.stats.tokens_generated} "
+          f"tokens: {eng.throughput_tok_s():.1f} tok/s, "
+          f"{eng.stats.prefill_launches}+{eng.stats.decode_launches} "
+          f"prefill+decode launches over {len(ev)} bucket executables "
+          f"{sorted(ev)}")
 
 
 if __name__ == "__main__":

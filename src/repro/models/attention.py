@@ -102,15 +102,22 @@ class AttnPartial(NamedTuple):
 
 
 def attention_partial(q, k, v, *, kv_pos, q_pos, scale=None) -> AttnPartial:
-    """Partial softmax stats of q against one KV shard (positions given)."""
+    """Partial softmax stats of q against one KV shard (positions given).
+
+    ``q_pos`` is (Sq,) shared across the batch, or (B, Sq) per-sequence
+    positions (continuous-batching decode, where every slot sits at its own
+    position)."""
     B, Hq, Sq, D = q.shape
     group = Hq // k.shape[1]
     scale = scale if scale is not None else D ** -0.5
     kr = jnp.repeat(k, group, axis=1).astype(jnp.float32)
     vr = jnp.repeat(v, group, axis=1).astype(jnp.float32)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kr)
-    mask = q_pos[:, None] >= kv_pos[None, :]
-    s = jnp.where(mask[None, None], s, NEG_INF)
+    if q_pos.ndim == 1:
+        mask = (q_pos[:, None] >= kv_pos[None, :])[None, None]
+    else:
+        mask = (q_pos[:, :, None] >= kv_pos[None, None, :])[:, None]
+    s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)

@@ -30,8 +30,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import params as pm
-from repro.models.attention import (AttnPartial, attention_partial,
-                                    combine_partials)
+from repro.models.attention import attention_partial, combine_partials
 from repro.models.config import ModelConfig, attn_static
 from repro.models.layers import (ParallelContext, apply_rope, col_slice,
                                  dense, fused_dense, rms_norm_local,
@@ -123,6 +122,37 @@ def cache_pspecs(cfg: ModelConfig, mode: str, data_axes) -> Any:
 # ---------------------------------------------------------------------------
 # Decode-mode attention.
 # ---------------------------------------------------------------------------
+#
+# ``pos`` may be a scalar (single-shot serving: every sequence at the same
+# position) or a vector (B_loc,) (continuous batching: each slot at its own
+# position).  The vector path writes the new K/V with a one-hot scatter and
+# masks attention per slot; at equal positions it computes the same values as
+# the scalar path, which the engine parity test relies on.
+
+
+def _rope_decode(q, k, pos, hd, theta):
+    """Rotate the single new q/k at ``pos`` (scalar or per-slot vector)."""
+    if jnp.ndim(pos) == 0:
+        cos, sin = rope_tables(jnp.reshape(pos, (1,)), hd, theta)
+        return apply_rope(q, cos[None], sin[None]), \
+            apply_rope(k, cos[None], sin[None])
+    cos, sin = rope_tables(pos[:, None], hd, theta)      # (B, 1, hd/2)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def _scatter_kv(kc, vc, k, v, local_pos, valid=None):
+    """Write k/v (B, 1, kvh, hd) into the cache at per-slot ``local_pos``.
+
+    ``valid`` (B,) optionally masks slots whose position falls outside this
+    PE's cache shard (sequence-sharded layouts)."""
+    S = kc.shape[1]
+    hit = jnp.arange(S)[None, :] == jnp.clip(local_pos, 0, S - 1)[:, None]
+    if valid is not None:
+        hit = hit & valid[:, None]
+    sel = hit[..., None, None]
+    return (jnp.where(sel, k.astype(kc.dtype), kc),
+            jnp.where(sel, v.astype(vc.dtype), vc))
+
 
 def _attn_decode_batched(pctx, p, x, cfg, kc, vc, pos):
     """x (B_pe, 1, D_loc); kc/vc (B_pe, S_max, kvh_loc, hd) local; pos traced.
@@ -139,16 +169,22 @@ def _attn_decode_batched(pctx, p, x, cfg, kc, vc, pos):
     if cfg.qk_norm:
         q = rms_norm_local(q, p["q_norm"])
         k = rms_norm_local(k, p["k_norm"])
-    cos, sin = rope_tables(jnp.reshape(pos, (1,)), hd, cfg.rope_theta)
-    q = apply_rope(q, cos[None], sin[None])
-    k = apply_rope(k, cos[None], sin[None])
-    kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
-    vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+    q, k = _rope_decode(q, k, pos, hd, cfg.rope_theta)
     kv_pos = jnp.arange(kc.shape[1])
-    part = attention_partial(
-        q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
-        vc.transpose(0, 2, 1, 3), kv_pos=kv_pos,
-        q_pos=jnp.reshape(pos, (1,)))
+    if jnp.ndim(pos) == 0:
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos,
+                                             axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos,
+                                             axis=1)
+        part = attention_partial(
+            q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+            vc.transpose(0, 2, 1, 3), kv_pos=kv_pos,
+            q_pos=jnp.reshape(pos, (1,)))
+    else:
+        kc, vc = _scatter_kv(kc, vc, k, v, pos)
+        part = attention_partial(
+            q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+            vc.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=pos[:, None])
     out = (part.acc / jnp.maximum(part.l, 1e-30)[..., None])
     out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
     y = dense(pctx, out.astype(x.dtype), p["wo"])
@@ -172,23 +208,29 @@ def _attn_decode_longctx(pctx, p, x, cfg, kc, vc, pos, shard_offset,
     if cfg.qk_norm:
         q = rms_norm_local(q, p["q_norm"])
         k = rms_norm_local(k, p["k_norm"])
-    cos, sin = rope_tables(jnp.reshape(pos, (1,)), hd, cfg.rope_theta)
-    q = apply_rope(q, cos[None], sin[None])
-    k = apply_rope(k, cos[None], sin[None])
+    q, k = _rope_decode(q, k, pos, hd, cfg.rope_theta)
     # write the new KV into its owner shard (masked dynamic update)
     S_loc = kc.shape[1]
-    local_pos = jnp.clip(pos - shard_offset, 0, S_loc - 1)
-    mine = (pos >= shard_offset) & (pos < shard_offset + S_loc)
-    k_old = lax.dynamic_slice_in_dim(kc, local_pos, 1, axis=1)
-    v_old = lax.dynamic_slice_in_dim(vc, local_pos, 1, axis=1)
-    k_new = jnp.where(mine, k.astype(kc.dtype), k_old)
-    v_new = jnp.where(mine, v.astype(vc.dtype), v_old)
-    kc = lax.dynamic_update_slice_in_dim(kc, k_new, local_pos, axis=1)
-    vc = lax.dynamic_update_slice_in_dim(vc, v_new, local_pos, axis=1)
     kv_pos = shard_offset + jnp.arange(S_loc)
-    part = attention_partial(
-        q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
-        vc.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=jnp.reshape(pos, (1,)))
+    if jnp.ndim(pos) == 0:
+        local_pos = jnp.clip(pos - shard_offset, 0, S_loc - 1)
+        mine = (pos >= shard_offset) & (pos < shard_offset + S_loc)
+        k_old = lax.dynamic_slice_in_dim(kc, local_pos, 1, axis=1)
+        v_old = lax.dynamic_slice_in_dim(vc, local_pos, 1, axis=1)
+        k_new = jnp.where(mine, k.astype(kc.dtype), k_old)
+        v_new = jnp.where(mine, v.astype(vc.dtype), v_old)
+        kc = lax.dynamic_update_slice_in_dim(kc, k_new, local_pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v_new, local_pos, axis=1)
+        part = attention_partial(
+            q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+            vc.transpose(0, 2, 1, 3), kv_pos=kv_pos,
+            q_pos=jnp.reshape(pos, (1,)))
+    else:
+        mine = (pos >= shard_offset) & (pos < shard_offset + S_loc)
+        kc, vc = _scatter_kv(kc, vc, k, v, pos - shard_offset, valid=mine)
+        part = attention_partial(
+            q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+            vc.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=pos[:, None])
 
     # reduce over grid ROWS (+ the data axes when the cache shards there):
     def reduce_max(t):
@@ -299,14 +341,22 @@ def _last_logits(pctx, lm_head_blk, x, gather_rows: bool):
     return logits
 
 
-def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                      batch: int, s_max: int, mode: str = "batched",
-                     tp_strategy: Optional[str] = None):
-    """serve_step(params, cache, tokens, pos) -> (logits, cache).
+                     tp_strategy: Optional[str] = None,
+                     per_slot: bool = False):
+    """Device-level decode step body + boundary specs (un-mapped).
 
-    ``mode="batched"``: tokens (B,) sharded over data; Cannon projections.
-    ``mode="longctx"``: tokens (B,) replicated; gemv2d projections over
-    UNSKEWED weights (pass tp_strategy="allgather"-storage params).
+    Returns ``(body, in_specs, out_specs, specs, pctx)`` so callers can either
+    ``shard_map`` it directly (:func:`make_decode_step`) or wrap it as a
+    :class:`repro.core.hybrid.HybridKernel` and enqueue it on a
+    ``CommandQueue`` (the serving engine).
+
+    With ``per_slot=True`` the step takes vector ``pos`` (B,) and ``reset``
+    (B,) operands: each batch slot advances from its own position, and slots
+    flagged in ``reset`` have their cache entries zeroed before the step —
+    which is how the continuous-batching engine recycles slots without a
+    second compiled executable.
     """
     if tp_strategy is None:
         tp_strategy = "cannon" if mode == "batched" else "gemv"
@@ -324,11 +374,23 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
     pattern = cfg.pattern()
 
-    def body(params, cache, tokens, pos):
+    if per_slot and mode == "longctx":
+        raise NotImplementedError(
+            "per-slot decode needs a data-sharded batch dim "
+            "(modes: batched, gemv)")
+
+    def body(params, cache, tokens, pos, *extra):
+        reset = extra[0] if per_slot else None
         grid = pctx.grid
         i, _ = grid.my_coords()
         x = _embed_decode(pctx, params["embed"], tokens, mode,
                           cfg.compute_dtype)
+        if per_slot and mode == "batched":
+            # the embed reduce-scatter gave row i batch chunk i; slice the
+            # per-slot operands to match
+            B_pe = x.shape[0]
+            pos = lax.dynamic_slice_in_dim(pos, i * B_pe, B_pe)
+            reset = lax.dynamic_slice_in_dim(reset, i * B_pe, B_pe)
         if mode == "longctx":
             # this PE's cache shard covers [shard_offset, +S_loc)
             didx = jnp.zeros((), jnp.int32)
@@ -355,6 +417,13 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
 
         # strip the n_pes dim (shard_map gives local (G, 1, ...) leaves)
         local_cache = jax.tree.map(lambda c: c[:, 0], cache)
+        if per_slot:
+            # recycled slots start from a clean cache (slot-reset is folded
+            # into the step so each bucket keeps a single executable)
+            def _wipe(c):
+                sel = reset.reshape((1, -1) + (1,) * (c.ndim - 2)) > 0
+                return jnp.where(sel, jnp.zeros((), c.dtype), c)
+            local_cache = jax.tree.map(_wipe, local_cache)
         x, new_cache = lax.scan(group_body, x,
                                 (params["layers"], local_cache))
         x = _norm(pctx, cfg, params["final_norm"], x)
@@ -369,12 +438,30 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         else pctx.data_axes[0]
     tok_spec = P() if mode == "longctx" else P(lead)
     logit_spec = P() if mode == "longctx" else P(lead, None, None)
+    if per_slot:
+        in_specs = (pspecs, cpspecs, tok_spec, tok_spec, tok_spec)
+    else:
+        in_specs = (pspecs, cpspecs, tok_spec, P())
+    return body, in_specs, (logit_spec, cpspecs), specs, pctx
 
-    mapped = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(pspecs, cpspecs, tok_spec, P()),
-        out_specs=(logit_spec, cpspecs),
-        check_vma=False)
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+                     batch: int, s_max: int, mode: str = "batched",
+                     tp_strategy: Optional[str] = None,
+                     per_slot: bool = False):
+    """serve_step(params, cache, tokens, pos[, reset]) -> (logits, cache).
+
+    ``mode="batched"``: tokens (B,) sharded over data; Cannon projections.
+    ``mode="longctx"``: tokens (B,) replicated; gemv2d projections over
+    UNSKEWED weights (pass tp_strategy="allgather"-storage params).
+    ``per_slot=True``: ``pos``/``reset`` are (B,) vectors sharded like
+    ``tokens`` (continuous-batching step; see :func:`make_decode_body`).
+    """
+    body, in_specs, out_specs, specs, pctx = make_decode_body(
+        cfg, mesh, plan, batch=batch, s_max=s_max, mode=mode,
+        tp_strategy=tp_strategy, per_slot=per_slot)
+    mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
     return jax.jit(mapped, donate_argnums=(1,)), specs, pctx
 
 

@@ -1,0 +1,26 @@
+"""Continuous-batching serving engine on the hybrid CommandQueue.
+
+Layering (host side of the paper's OpenCL analogy):
+
+    api.generate()            synchronous facade
+      engine.ServingEngine    drive loop: one kernel enqueue per step
+        scheduler.Scheduler   bucketed admission / preemption policy
+          block_cache.BlockPool   paged KV accounting (ref-counts, free list)
+          request.Request     WAITING -> PREFILL -> DECODE -> FINISHED
+"""
+
+from repro.serve.engine.api import Completion, build_engine, generate
+from repro.serve.engine.block_cache import (BlockLayout, BlockPool,
+                                            PoolExhausted, SequenceBlocks,
+                                            block_layout)
+from repro.serve.engine.engine import EngineConfig, EngineStats, ServingEngine
+from repro.serve.engine.request import Request, RequestState, SamplingParams
+from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
+                                          SchedulerConfig)
+
+__all__ = [
+    "BlockLayout", "BlockPool", "Completion", "EngineConfig", "EngineStats",
+    "PoolExhausted", "Request", "RequestState", "SamplingParams",
+    "ScheduledStep", "Scheduler", "SchedulerConfig", "SequenceBlocks",
+    "ServingEngine", "block_layout", "build_engine", "generate",
+]

@@ -1,0 +1,57 @@
+"""Synchronous facade: ``generate(prompts, sampling) -> completions``.
+
+The smallest useful surface over :class:`ServingEngine` — submit a batch of
+prompts, drain the engine, and return per-request completions.  Used by
+``examples/serve_decode.py``, ``repro.launch.serve --engine`` and the
+throughput benchmark; an async server would replace ``drain()`` with a
+stream of ``engine.step()`` calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+from repro.serve.engine.engine import EngineConfig, ServingEngine
+from repro.serve.engine.request import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    request_id: str
+    prompt: List[int]
+    tokens: List[int]              # generated tokens (incl. EOS when hit)
+    finish_reason: str             # "stop" | "length" | "cancelled"
+    n_preemptions: int
+
+
+def build_engine(cfg, mesh, plan, *, engine_cfg: Optional[EngineConfig] = None,
+                 params=None, seed: int = 0) -> ServingEngine:
+    """Construct an engine (initializing fresh params when none are given)."""
+    return ServingEngine(cfg, mesh, plan, params=params,
+                         engine_cfg=engine_cfg, seed=seed)
+
+
+def generate(engine: ServingEngine, prompts: Sequence[Sequence[int]],
+             sampling: Union[SamplingParams, Sequence[SamplingParams],
+                             None] = None) -> List[Completion]:
+    """Submit ``prompts``, run the engine to completion, return completions.
+
+    ``sampling`` may be one ``SamplingParams`` for all prompts or a
+    per-prompt sequence.  Drains *all* outstanding work on the engine, so
+    completions for previously submitted requests are simply finalized too.
+    """
+    if sampling is None or isinstance(sampling, SamplingParams):
+        per = [sampling or SamplingParams()] * len(prompts)
+    else:
+        per = list(sampling)
+        if len(per) != len(prompts):
+            raise ValueError(
+                f"{len(prompts)} prompts but {len(per)} sampling params")
+    requests = [engine.submit(p, s) for p, s in zip(prompts, per)]
+    engine.drain()
+    return [Completion(request_id=r.request_id, prompt=list(r.prompt),
+                       tokens=list(r.output_tokens),
+                       finish_reason=r.finish_reason or "length",
+                       n_preemptions=r.n_preemptions)
+            for r in requests]

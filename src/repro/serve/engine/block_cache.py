@@ -1,0 +1,187 @@
+"""Paged KV block pool: ref-counted pages over the dense device cache.
+
+SHARK's serving ``Cache`` hands out ``BlockCacheEntry`` pages of
+``block_pos_stride`` positions and lets compiled entrypoints consume block
+index tables.  Here the *physical* KV lives in the dense
+``(groups, n_pes, B_bucket, S, kvh, hd)`` arrays of ``serve/decode.py`` (one
+arena per batch bucket), so the pool is the host-side ownership layer over
+that arena:
+
+  * capacity   — ``n_blocks`` quantizes total KV memory; the scheduler admits
+                 and preempts against it, exactly as it would against a
+                 physically paged arena;
+  * ref-counts — blocks are shared by forked sequences (prefix-sharing hook)
+                 and recycled through a free list on last release;
+  * layout     — :func:`block_layout` derives the per-block device footprint
+                 from the same ``cache_specs`` boundary shapes the kernels
+                 compile against, so pool sizing tracks the real cache.
+
+Pure host code: no jax arrays are touched here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class PoolExhausted(Exception):
+    """Raised when an allocation cannot be satisfied (triggers preemption)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Device footprint of one KV page (``block_pos_stride`` positions of one
+    sequence slot, across all layer groups and PEs)."""
+
+    block_pos_stride: int
+    bytes_per_block: int
+    mode: str
+
+
+def block_layout(cfg, plan, *, block_pos_stride: int,
+                 mode: str = "gemv") -> BlockLayout:
+    """Derive the per-block byte footprint from the decode cache specs.
+
+    Uses the exact ``cache_specs`` pytree that the step kernels compile
+    against — the (groups, n_pes, ...) boundary layout — scaled down to one
+    slot and ``block_pos_stride`` positions.
+    """
+    import numpy as np
+    from repro.serve.decode import cache_specs
+
+    q = plan.grid_q
+    dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
+    # minimal legal (batch, s_max) for the mode's divisibility rules
+    if mode == "batched":
+        b0, s0 = dshards * q, block_pos_stride
+        positions = block_pos_stride
+    else:  # gemv / longctx shard the sequence over the q grid rows
+        b0, s0 = dshards * q, block_pos_stride * q
+        positions = block_pos_stride * q
+    entries = cache_specs(cfg, plan, b0, s0, mode)
+    total = 0
+    for entry in entries:
+        for leaf in entry.values():
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    per_slot_per_pos = total / (b0 * positions)
+    return BlockLayout(block_pos_stride=block_pos_stride,
+                       bytes_per_block=int(per_slot_per_pos
+                                           * block_pos_stride),
+                       mode=mode)
+
+
+class BlockPool:
+    """Fixed pool of KV pages with ref-counting and free-list recycling."""
+
+    def __init__(self, n_blocks: int, block_pos_stride: int,
+                 layout: Optional[BlockLayout] = None):
+        if n_blocks < 1:
+            raise ValueError("n_blocks must be >= 1")
+        if block_pos_stride < 1:
+            raise ValueError("block_pos_stride must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_pos_stride = block_pos_stride
+        self.layout = layout
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._refs: List[int] = [0] * n_blocks
+        self._prefix: Dict[Tuple[int, ...], int] = {}
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache positions."""
+        return -(-n_tokens // self.block_pos_stride) if n_tokens > 0 else 0
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    # -- alloc / free ------------------------------------------------------
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.n_blocks} KV blocks in use")
+        bid = self._free.pop()
+        self._refs[bid] = 1
+        return bid
+
+    def retain(self, bid: int) -> int:
+        if self._refs[bid] <= 0:
+            raise ValueError(f"retain of free block {bid}")
+        self._refs[bid] += 1
+        return bid
+
+    def release(self, bid: int) -> None:
+        if self._refs[bid] <= 0:
+            raise ValueError(f"double free of block {bid}")
+        self._refs[bid] -= 1
+        if self._refs[bid] == 0:
+            self._free.append(bid)
+            # lazily invalidate published prefixes resolving to this block
+            self._prefix = {k: v for k, v in self._prefix.items() if v != bid}
+
+    def refcount(self, bid: int) -> int:
+        return self._refs[bid]
+
+    # -- prefix sharing hooks ----------------------------------------------
+    #
+    # With a physically paged arena these let a new request adopt the KV
+    # pages of an identical prompt prefix; with the dense arena they still
+    # dedupe *accounting* for forked sequences (n>1 sampling from one
+    # prompt).  Keys are full token tuples of the positions a block covers.
+
+    def publish_prefix(self, key: Tuple[int, ...], bid: int) -> None:
+        if self._refs[bid] <= 0:
+            raise ValueError(f"publishing free block {bid}")
+        self._prefix[tuple(key)] = bid
+
+    def lookup_prefix(self, key: Tuple[int, ...]) -> Optional[int]:
+        bid = self._prefix.get(tuple(key))
+        if bid is None or self._refs[bid] <= 0:
+            return None
+        return self.retain(bid)
+
+
+class SequenceBlocks:
+    """The block table of one sequence: an append-only run of pages."""
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.ids: List[int] = []
+
+    @property
+    def capacity(self) -> int:
+        """Cache positions currently backed by allocated pages."""
+        return len(self.ids) * self.pool.block_pos_stride
+
+    def ensure(self, n_tokens: int) -> None:
+        """Grow the table to cover ``n_tokens`` positions (atomic: either all
+        needed pages are allocated or none, so a failed grow can be retried
+        after preemption)."""
+        need = self.pool.blocks_for(n_tokens) - len(self.ids)
+        if need <= 0:
+            return
+        if not self.pool.can_alloc(need):
+            raise PoolExhausted(
+                f"need {need} blocks, {self.pool.n_free} free")
+        self.ids.extend(self.pool.alloc() for _ in range(need))
+
+    def release_all(self) -> None:
+        for bid in reversed(self.ids):
+            self.pool.release(bid)
+        self.ids = []
+
+    def fork(self) -> "SequenceBlocks":
+        """Share this table with a sibling sequence (ref-count bump)."""
+        child = SequenceBlocks(self.pool)
+        child.ids = [self.pool.retain(bid) for bid in self.ids]
+        return child

@@ -1,0 +1,265 @@
+"""Continuous-batching drive loop over the hybrid CommandQueue.
+
+Every step is one OpenCL-style kernel enqueue: the per-bucket step executable
+(``serve_step_bs{N}``, built once per bucket by ``queue.build``) consumes the
+dense KV arena plus per-slot ``tokens``/``pos``/``reset`` vectors, advances
+every occupied slot by one position, and returns next-token logits.  The host
+loop scatters request tokens in, gathers sampled tokens out, and drives the
+request state machine; ``queue.finish()`` after each launch is the paper's
+``clFinish`` and stamps the ``KernelEvent`` timestamps the throughput
+benchmark reads.
+
+Prefill is token-stepped through the same executable (slots still consuming
+prompt tokens simply don't sample), so a bucket never needs a second
+compiled program and mixed prefill/decode batches are the norm, not a
+special case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.hybrid import CommandQueue, HybridKernel
+from repro.models import params as pm
+from repro.serve.decode import cache_pspecs, cache_specs, make_decode_body
+from repro.serve.engine.block_cache import BlockPool, block_layout
+from repro.serve.engine.request import Request, RequestState, SamplingParams
+from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
+                                          SchedulerConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    s_max: int = 128                      # cache positions per sequence slot
+    buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    block_pos_stride: int = 16            # positions per KV page
+    n_kv_blocks: Optional[int] = None     # pool size; None = fit max batch
+    mode: str = "gemv"                    # per-slot capable decode layout
+    max_steps: Optional[int] = None       # drain() safety valve
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    prefill_launches: int = 0
+    decode_launches: int = 0
+    tokens_generated: int = 0
+    migrations: int = 0
+
+
+class ServingEngine:
+    """Batch-generate service over one device mesh (cf. SHARK's
+    ``BatchGenerateService``, with the CommandQueue as the session)."""
+
+    def __init__(self, cfg, mesh, plan, *, params=None,
+                 engine_cfg: Optional[EngineConfig] = None, seed: int = 0):
+        ec = engine_cfg or EngineConfig()
+        if ec.mode != "gemv":
+            # per-slot decode also supports "batched", but the engine's
+            # slot migration gathers cache batch rows 1:1 — in batched mode
+            # slots are scattered over grid rows, so migration would move
+            # the wrong KV (ROADMAP open item)
+            raise ValueError(
+                f"engine currently serves via mode='gemv' only: {ec.mode!r}")
+        q = plan.grid_q
+        dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
+        if ec.s_max % q:
+            raise ValueError(f"gemv mode needs s_max % {q} == 0: {ec.s_max}")
+        bad = [b for b in ec.buckets if b % dshards]
+        if bad:
+            raise ValueError(
+                f"buckets {bad} not divisible by the data-shard count "
+                f"{dshards}")
+        self.cfg, self.mesh, self.plan, self.engine_cfg = cfg, mesh, plan, ec
+
+        # shared lowering metadata: body/specs are batch-polymorphic, only
+        # the compiled executables are per-bucket
+        _, _, _, specs, pctx = make_decode_body(
+            cfg, mesh, plan, batch=ec.buckets[-1], s_max=ec.s_max,
+            mode=ec.mode, per_slot=True)
+        self.specs, self.pctx = specs, pctx
+        if params is None:
+            params = pm.init_params(specs, seed=seed)
+            pspecs = pm.param_pspecs(specs)
+            params = jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                params, pspecs)
+        self.params = params
+
+        lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
+            else pctx.data_axes[0]
+        self._vec_sharding = NamedSharding(mesh, P(lead))
+        self._cpspecs = cache_pspecs(cfg, ec.mode, pctx.data_axes)
+
+        layout = block_layout(cfg, plan, block_pos_stride=ec.block_pos_stride,
+                              mode=ec.mode)
+        blocks_per_seq = -(-ec.s_max // ec.block_pos_stride)
+        n_blocks = ec.n_kv_blocks or ec.buckets[-1] * blocks_per_seq
+        self.pool = BlockPool(n_blocks, ec.block_pos_stride, layout=layout)
+        self.scheduler = Scheduler(self.pool, SchedulerConfig(ec.buckets))
+
+        self.queue = CommandQueue(mesh)
+        self._kernels: Dict[int, HybridKernel] = {}
+        self._cache = None
+        self._bucket: Optional[int] = None
+        self._rngs: Dict[str, np.random.Generator] = {}
+        self.stats = EngineStats()
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt: Sequence[int],
+               sampling: Optional[SamplingParams] = None) -> Request:
+        req = Request(prompt, sampling)
+        ec = self.engine_cfg
+        if len(req.prompt) + req.sampling.max_tokens > ec.s_max:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_tokens "
+                f"({req.sampling.max_tokens}) exceeds s_max={ec.s_max}")
+        # the request must fit the pool at its FULL grown length (plus the
+        # one-token lookahead the scheduler reserves), or decode would hit an
+        # unpreemptable dead end mid-flight
+        worst = min(len(req.prompt) + req.sampling.max_tokens, ec.s_max)
+        if self.pool.blocks_for(worst) > self.pool.n_blocks:
+            raise ValueError(
+                f"sequence needs up to {self.pool.blocks_for(worst)} KV "
+                f"blocks but the pool holds {self.pool.n_blocks}")
+        self.scheduler.submit(req)
+        return req
+
+    def cancel(self, request_id: str) -> bool:
+        return self.scheduler.cancel(request_id)
+
+    # -- per-bucket executables --------------------------------------------
+
+    def _kernel(self, bucket: int) -> HybridKernel:
+        kernel = self._kernels.get(bucket)
+        if kernel is None:
+            ec = self.engine_cfg
+            body, in_specs, out_specs, _, _ = make_decode_body(
+                self.cfg, self.mesh, self.plan, batch=bucket, s_max=ec.s_max,
+                mode=ec.mode, per_slot=True)
+            kernel = HybridKernel(
+                lambda grid, *args: body(*args), grid=self.pctx.grid,
+                in_specs=in_specs, out_specs=out_specs,
+                name=f"serve_step_bs{bucket}", donate=(1,))
+            self._kernels[bucket] = kernel
+        return kernel
+
+    # -- KV arena management -----------------------------------------------
+
+    def _zero_cache(self, bucket: int):
+        ec = self.engine_cfg
+        cs = cache_specs(self.cfg, self.plan, bucket, ec.s_max, ec.mode)
+        return jax.tree.map(
+            lambda sd, sp: jax.device_put(
+                jnp.zeros(sd.shape, sd.dtype), NamedSharding(self.mesh, sp)),
+            cs, self._cpspecs)
+
+    def _prepare_cache(self, sd: ScheduledStep) -> None:
+        identity = all(m == -1 or m == s for s, m in enumerate(sd.slot_map))
+        if self._cache is not None and sd.bucket == self._bucket and identity:
+            return
+        if self._cache is None or all(m == -1 for m in sd.slot_map):
+            self._cache = self._zero_cache(sd.bucket)
+        else:
+            # gather surviving slots' KV rows into their new positions; fresh
+            # slots are wiped in-kernel by the reset flag
+            idx = jnp.asarray([max(m, 0) for m in sd.slot_map])
+            self._cache = jax.tree.map(
+                lambda c, sp: jax.device_put(
+                    jnp.take(c, idx, axis=2), NamedSharding(self.mesh, sp)),
+                self._cache, self._cpspecs)
+            self.stats.migrations += 1
+        self._bucket = sd.bucket
+
+    # -- the drive loop ----------------------------------------------------
+
+    def step(self) -> bool:
+        """Schedule + enqueue one step kernel; returns False when idle."""
+        sd = self.scheduler.schedule()
+        if sd is None:
+            return False
+        self._prepare_cache(sd)
+        B = sd.bucket
+        tokens = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        reset = np.asarray(sd.fresh, np.int32)
+        for s, r in enumerate(sd.slots):
+            if r is not None:
+                tokens[s] = r.next_token
+                pos[s] = r.num_cached
+        dev = lambda a: jax.device_put(jnp.asarray(a), self._vec_sharding)
+        logits, self._cache = self.queue.enqueue(
+            self._kernel(B), self.params, self._cache,
+            dev(tokens), dev(pos), dev(reset))
+        self.stats.steps += 1
+        if sd.is_prefill:
+            self.stats.prefill_launches += 1
+        else:
+            self.stats.decode_launches += 1
+        rows = np.asarray(logits[:, 0, :self.cfg.vocab_size])
+        for s, r in enumerate(sd.slots):
+            if r is None:
+                continue
+            will_sample = r.samples_this_step
+            r.num_cached += 1
+            if not will_sample:
+                continue
+            tok = self._sample(r, rows[s])
+            r.output_tokens.append(tok)
+            self.stats.tokens_generated += 1
+            if r.state == RequestState.PREFILL:
+                r.transition(RequestState.DECODE)
+            reason = r.finish_reason_for(tok, self.engine_cfg.s_max)
+            if reason is not None:
+                self.scheduler.complete(r, reason)
+        self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
+        return True
+
+    def _sample(self, req: Request, row: np.ndarray) -> int:
+        t = req.sampling.temperature
+        if t <= 0.0:
+            return int(np.argmax(row))
+        rng = self._rngs.get(req.request_id)
+        if rng is None:
+            rng = self._rngs[req.request_id] = \
+                np.random.default_rng(req.sampling.seed)
+        z = row.astype(np.float64) / t
+        z -= z.max()
+        p = np.exp(z)
+        return int(rng.choice(len(row), p=p / p.sum()))
+
+    def drain(self) -> None:
+        """Run until every submitted request reaches FINISHED."""
+        steps = 0
+        limit = self.engine_cfg.max_steps
+        while self.scheduler.has_work:
+            if not self.step():
+                break
+            steps += 1
+            if limit is not None and steps > limit:
+                raise RuntimeError(f"drain exceeded max_steps={limit}")
+        self.queue.finish()
+
+    # -- observability -----------------------------------------------------
+
+    def kernel_events(self):
+        return {name: ev for name, ev in self.queue.events.items()
+                if name.startswith("serve_step_bs")}
+
+    def throughput_tok_s(self) -> float:
+        """Generated tokens / wall-span of step-kernel activity, derived
+        purely from CommandQueue KernelEvent timestamps."""
+        evs = [e for e in self.kernel_events().values() if e.first_enqueue_t]
+        if not evs or not self.stats.tokens_generated:
+            return 0.0
+        t0 = min(e.first_enqueue_t for e in evs)
+        t1 = max(e.last_done_t or e.last_enqueue_t for e in evs)
+        return self.stats.tokens_generated / max(t1 - t0, 1e-9)

@@ -1,0 +1,136 @@
+"""Request/sequence lifecycle for the continuous-batching engine.
+
+State machine (SHARK's ``GenerateRequest`` distilled to the hybrid model):
+
+    WAITING --admit--> PREFILL --last prompt token--> DECODE --stop--> FINISHED
+       ^                  |                              |
+       +----preempt-------+------------preempt----------+
+
+A preempted request drops its KV blocks and re-enters WAITING with
+``num_cached = 0``; on re-admission it replays prompt *and* already-generated
+tokens through the step kernel (recompute-style preemption — no KV swap).
+Cancellation is legal from any non-terminal state and is recorded as
+``finish_reason == "cancelled"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence
+
+
+class RequestState:
+    WAITING = "WAITING"
+    PREFILL = "PREFILL"
+    DECODE = "DECODE"
+    FINISHED = "FINISHED"
+
+
+_TRANSITIONS = {
+    RequestState.WAITING: {RequestState.PREFILL, RequestState.FINISHED},
+    RequestState.PREFILL: {RequestState.DECODE, RequestState.WAITING,
+                           RequestState.FINISHED},
+    RequestState.DECODE: {RequestState.WAITING, RequestState.FINISHED},
+    RequestState.FINISHED: set(),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls (greedy when ``temperature == 0``)."""
+
+    max_tokens: int = 16
+    temperature: float = 0.0
+    eos_token_id: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+
+
+_request_ids = itertools.count()
+
+
+class Request:
+    """One in-flight generation request (sequence + scheduling state)."""
+
+    def __init__(self, prompt: Sequence[int],
+                 sampling: Optional[SamplingParams] = None,
+                 request_id: Optional[str] = None):
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("prompt must contain at least one token")
+        self.request_id = request_id or f"req-{next(_request_ids)}"
+        self.prompt = prompt
+        self.sampling = sampling or SamplingParams()
+        self.state = RequestState.WAITING
+        self.output_tokens: List[int] = []
+        # KV entries written to the device cache so far.  In steady-state
+        # decode this equals len(seq_tokens) - 1: the step feeds
+        # seq_tokens[num_cached] and yields the logits that extend the
+        # sequence.
+        self.num_cached = 0
+        self.slot: Optional[int] = None      # batch slot while scheduled
+        self.blocks = None                   # SequenceBlocks while scheduled
+        self.finish_reason: Optional[str] = None
+        self.n_preemptions = 0
+
+    # -- sequence view -----------------------------------------------------
+
+    @property
+    def seq_tokens(self) -> List[int]:
+        return self.prompt + self.output_tokens
+
+    @property
+    def next_token(self) -> int:
+        """Token this request feeds at its next step (position num_cached)."""
+        return self.seq_tokens[self.num_cached]
+
+    @property
+    def samples_this_step(self) -> bool:
+        """True when the next step's logits extend the sequence."""
+        return self.num_cached == len(self.seq_tokens) - 1
+
+    @property
+    def is_finished(self) -> bool:
+        return self.state == RequestState.FINISHED
+
+    # -- state machine -----------------------------------------------------
+
+    def transition(self, new_state: str) -> None:
+        if new_state not in _TRANSITIONS[self.state]:
+            raise ValueError(
+                f"{self.request_id}: illegal transition "
+                f"{self.state} -> {new_state}")
+        self.state = new_state
+
+    def finish(self, reason: str) -> None:
+        self.transition(RequestState.FINISHED)
+        self.finish_reason = reason
+
+    def preempt(self) -> None:
+        """Back to WAITING, dropping cache progress (blocks freed by caller)."""
+        self.transition(RequestState.WAITING)
+        self.num_cached = 0
+        self.slot = None
+        self.n_preemptions += 1
+
+    def finish_reason_for(self, token: int, s_max: int) -> Optional[str]:
+        """Termination rule applied after ``token`` was appended."""
+        sp = self.sampling
+        if sp.eos_token_id is not None and token == sp.eos_token_id:
+            return "stop"
+        if len(self.output_tokens) >= sp.max_tokens:
+            return "length"
+        if self.num_cached >= s_max:      # cache full: cannot take more steps
+            return "length"
+        return None
+
+    def __repr__(self):
+        return (f"Request({self.request_id}, {self.state}, "
+                f"prompt={len(self.prompt)}, out={len(self.output_tokens)}, "
+                f"cached={self.num_cached}, slot={self.slot})")

@@ -1,0 +1,218 @@
+"""Continuous-batching scheduler: bucketed admission, LIFO preemption.
+
+Policy (vLLM-style, adapted to the one-executable-per-bucket constraint):
+
+  * Batch sizes are drawn from a fixed ascending tuple of powers of two
+    (``prefill_bs{N}`` / ``decode_bs{N}`` in SHARK terms); the active bucket
+    is the smallest one covering the running set, so a mixed workload never
+    compiles per-request — at most one step executable per bucket.
+  * FIFO admission: a waiting request is admitted when a slot is free and
+    the pool can back its whole current sequence plus one lookahead token.
+  * Before every step each running request's block table is grown to cover
+    its next position; on pool exhaustion the *youngest* running request is
+    preempted (blocks released, recompute on re-admission) until the oldest
+    make progress — guaranteeing liveness while any single sequence fits.
+
+The scheduler is pure host logic over :mod:`request` and
+:mod:`block_cache`; the engine owns devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+from repro.serve.engine.block_cache import BlockPool, PoolExhausted, \
+    SequenceBlocks
+from repro.serve.engine.request import Request, RequestState
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    buckets: Tuple[int, ...] = (1, 2, 4, 8)
+
+    def __post_init__(self):
+        if not self.buckets:
+            raise ValueError("need at least one bucket")
+        if list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError(f"buckets must be ascending: {self.buckets}")
+        bad = [b for b in self.buckets if not _is_pow2(b)]
+        if bad:
+            raise ValueError(f"buckets must be powers of two: {bad}")
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"{n} exceeds max bucket {self.max_batch}")
+
+
+@dataclasses.dataclass
+class ScheduledStep:
+    """One step's slot plan, consumed by the engine drive loop."""
+
+    bucket: int
+    slots: List[Optional[Request]]   # len == bucket; None = idle slot
+    slot_map: List[int]              # new slot -> previous slot (-1 = none)
+    fresh: List[bool]                # slots whose cache must be reset
+    admitted: List[Request]
+    preempted: List[Request]
+
+    @property
+    def is_prefill(self) -> bool:
+        """OpenCL-analogy label: a launch is a 'prefill enqueue' while any
+        slot is still consuming prompt (or replayed) tokens — including the
+        step that samples the first new token, as in SHARK's prefill
+        invocation."""
+        return any(r is not None and r.state == RequestState.PREFILL
+                   for r in self.slots)
+
+
+class Scheduler:
+    def __init__(self, pool: BlockPool,
+                 config: Optional[SchedulerConfig] = None):
+        self.pool = pool
+        self.config = config or SchedulerConfig()
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []     # admission order (oldest first)
+        self._bucket: Optional[int] = None
+        self.n_preemptions = 0
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.state != RequestState.WAITING:
+            raise ValueError(f"{request.request_id} is {request.state}, "
+                             "only WAITING requests can be submitted")
+        self.waiting.append(request)
+
+    def cancel(self, request_id: str) -> bool:
+        for i, r in enumerate(self.waiting):
+            if r.request_id == request_id:
+                del self.waiting[i]
+                r.finish("cancelled")
+                return True
+        for r in self.running:
+            if r.request_id == request_id:
+                self._retire(r)
+                r.finish("cancelled")
+                return True
+        return False
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- engine callbacks --------------------------------------------------
+
+    def complete(self, request: Request, reason: str) -> None:
+        """Engine reports a natural termination (EOS / length)."""
+        self._retire(request)
+        request.finish(reason)
+
+    def _retire(self, request: Request) -> None:
+        self.running.remove(request)
+        if request.blocks is not None:
+            request.blocks.release_all()
+            request.blocks = None
+        request.slot = None
+
+    def _preempt_one(self, keep: Request) -> Optional[Request]:
+        """Evict the youngest running request other than ``keep``."""
+        for victim in reversed(self.running):
+            if victim is keep:
+                continue
+            self.running.remove(victim)
+            victim.blocks.release_all()
+            victim.blocks = None
+            victim.preempt()
+            self.waiting.appendleft(victim)   # front: re-admit first
+            self.n_preemptions += 1
+            return victim
+        return None
+
+    # -- the policy --------------------------------------------------------
+
+    def schedule(self) -> Optional[ScheduledStep]:
+        preempted: List[Request] = []
+
+        # 1. guarantee every running request can write its next position,
+        #    oldest first; evict youngest on exhaustion
+        for r in list(self.running):
+            if r not in self.running:        # evicted by an older request
+                continue
+            while True:
+                try:
+                    r.blocks.ensure(r.num_cached + 1)
+                    break
+                except PoolExhausted:
+                    victim = self._preempt_one(keep=r)
+                    if victim is None:
+                        raise RuntimeError(
+                            f"KV pool ({self.pool.n_blocks} blocks of "
+                            f"{self.pool.block_pos_stride}) cannot hold a "
+                            f"single sequence of {r.num_cached + 1} tokens")
+                    preempted.append(victim)
+
+        # 2. FIFO admission into free capacity
+        admitted: List[Request] = []
+        while self.waiting and len(self.running) < self.config.max_batch:
+            head = self.waiting[0]
+            needed = self.pool.blocks_for(len(head.seq_tokens) + 1)
+            if not self.pool.can_alloc(needed):
+                if not self.running:
+                    raise RuntimeError(
+                        f"KV pool too small to admit {head.request_id} "
+                        f"({needed} blocks needed, {self.pool.n_blocks} "
+                        "total)")
+                break
+            self.waiting.popleft()
+            head.blocks = SequenceBlocks(self.pool)
+            head.blocks.ensure(len(head.seq_tokens) + 1)
+            head.transition(RequestState.PREFILL)
+            self.running.append(head)
+            admitted.append(head)
+
+        if not self.running:
+            return None
+
+        # 3. slot assignment within the chosen bucket: sticky where possible,
+        #    compact on shrink (the engine migrates cache rows by slot_map)
+        bucket = self.config.bucket_for(len(self.running))
+        prev_slots = {r.request_id: r.slot for r in self.running}
+        taken = set()
+        for r in self.running:               # sticky slots first
+            if r.slot is not None and r.slot < bucket and r.slot not in taken:
+                taken.add(r.slot)
+        free = iter(s for s in range(bucket) if s not in taken)
+        slots: List[Optional[Request]] = [None] * bucket
+        for r in self.running:
+            if not (r.slot is not None and r.slot < bucket
+                    and slots[r.slot] is None):
+                r.slot = next(free)
+            slots[r.slot] = r
+
+        slot_map = [-1] * bucket
+        fresh = [True] * bucket              # idle slots stay wiped
+        for s, r in enumerate(slots):
+            if r is None:
+                continue
+            prev = prev_slots.get(r.request_id)
+            if r.num_cached == 0 or prev is None:
+                fresh[s] = True              # new or recomputing: reset slot
+            else:
+                fresh[s] = False
+                slot_map[s] = prev
+        self._bucket = bucket
+        return ScheduledStep(bucket=bucket, slots=slots, slot_map=slot_map,
+                             fresh=fresh, admitted=admitted,
+                             preempted=preempted)

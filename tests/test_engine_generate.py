@@ -1,0 +1,171 @@
+"""End-to-end serving-engine tests on the CPU mesh.
+
+The load-bearing assertion is token parity: ``engine.generate()`` must emit
+exactly the tokens the pre-existing single-shot decode path emits for the
+same prompts/params — the continuous-batching machinery (per-slot positions,
+slot resets, bucket migration) must be invisible to the math.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.partition import DATA
+from repro.serve.decode import cache_pspecs, cache_specs, make_decode_step
+from repro.serve.engine import (EngineConfig, RequestState, SamplingParams,
+                                build_engine, generate)
+
+CFG = ModelConfig(name="eng", family="dense", d_model=64, n_layers=2,
+                  n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                  attn_block_kv=32)
+S_MAX = 32
+
+
+def _device_params(mesh, specs):
+    params = pm.init_params(specs, seed=0)
+    pspecs = pm.param_pspecs(specs)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        params, pspecs)
+
+
+def _single_shot_greedy(mesh, plan, prompts, n_tok):
+    """The pre-existing serving path: one fixed batch, scalar position."""
+    B, plen = prompts.shape
+    step, specs, pctx = make_decode_step(CFG, mesh, plan, batch=B,
+                                         s_max=S_MAX, mode="gemv")
+    params_d = _device_params(mesh, specs)
+    cs = cache_specs(CFG, plan, B, S_MAX, "gemv")
+    cps = cache_pspecs(CFG, "gemv", pctx.data_axes)
+    cache = jax.tree.map(
+        lambda sd, sp: jax.device_put(jnp.zeros(sd.shape, sd.dtype),
+                                      NamedSharding(mesh, sp)), cs, cps)
+    out = [[] for _ in range(B)]
+    tok = prompts[:, 0]
+    for t in range(plen + n_tok - 1):
+        logits, cache = step(params_d, cache,
+                             jax.device_put(jnp.asarray(tok),
+                                            NamedSharding(mesh, P(DATA))),
+                             jnp.int32(t))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :CFG.vocab_size], -1))
+        if t + 1 < plen:
+            tok = prompts[:, t + 1]
+        else:
+            tok = nxt.astype(np.int32)
+            for b in range(B):
+                out[b].append(int(nxt[b]))
+    return out, params_d
+
+
+def test_generate_matches_single_shot_decode(mesh16, plan16):
+    B, plen, n_tok = 4, 5, 8
+    prompts = np.random.default_rng(0).integers(
+        0, CFG.vocab_size, size=(B, plen)).astype(np.int32)
+    expect, params_d = _single_shot_greedy(mesh16, plan16, prompts, n_tok)
+
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, params=params_d)
+    outs = generate(eng, [p.tolist() for p in prompts],
+                    SamplingParams(max_tokens=n_tok))
+    for b, c in enumerate(outs):
+        assert c.tokens == expect[b], (b, c.tokens, expect[b])
+        assert c.finish_reason == "length"
+
+
+def test_mixed_length_workload_one_executable_per_bucket(mesh16, plan16):
+    """16 requests of mixed prompt/output lengths share bucketed
+    executables: no per-request (or per-shape) recompiles."""
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8), block_pos_stride=4)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, CFG.vocab_size,
+                            size=int(rng.integers(2, 10))).tolist()
+               for _ in range(16)]
+    sampling = [SamplingParams(max_tokens=int(rng.integers(3, 8)))
+                for _ in range(16)]
+    outs = generate(eng, prompts, sampling)
+    assert len(outs) == 16
+    for c, sp in zip(outs, sampling):
+        assert c.finish_reason == "length"
+        assert len(c.tokens) == sp.max_tokens
+    # at most one compiled executable per batch bucket actually used
+    used = set(eng.kernel_events())
+    assert eng.queue.n_executables == len(used) <= len(ec.buckets)
+    assert all(name.startswith("serve_step_bs") for name in used)
+    assert eng.stats.tokens_generated == sum(len(c.tokens) for c in outs)
+    assert eng.throughput_tok_s() > 0.0
+    assert eng.stats.prefill_launches > 0 and eng.stats.decode_launches > 0
+
+
+def test_preemption_under_tiny_pool_still_completes(mesh16, plan16):
+    # pool holds 12 positions total; three 4-token prompts generating 6
+    # tokens each cannot coexist -> scheduler must preempt and recompute
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2,
+                      n_kv_blocks=6, max_steps=400)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, CFG.vocab_size, size=4).tolist()
+               for _ in range(3)]
+    outs = generate(eng, prompts, SamplingParams(max_tokens=6))
+    assert all(len(c.tokens) == 6 for c in outs)
+    assert eng.scheduler.n_preemptions > 0
+    assert sum(c.n_preemptions for c in outs) == eng.scheduler.n_preemptions
+    assert eng.pool.n_free == eng.pool.n_blocks     # everything released
+
+
+def test_preemption_recompute_preserves_greedy_tokens(mesh16, plan16):
+    """Recompute-style preemption must not change greedy outputs."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size, size=4).tolist()
+               for _ in range(3)]
+    big = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2)
+    eng_big = build_engine(CFG, mesh16, plan16, engine_cfg=big, seed=0)
+    baseline = generate(eng_big, prompts, SamplingParams(max_tokens=6))
+
+    tiny = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2,
+                        n_kv_blocks=6, max_steps=400)
+    eng_tiny = build_engine(CFG, mesh16, plan16, engine_cfg=tiny, seed=0)
+    preempted = generate(eng_tiny, prompts, SamplingParams(max_tokens=6))
+    assert eng_tiny.scheduler.n_preemptions > 0
+    for b, p in zip(baseline, preempted):
+        assert b.tokens == p.tokens
+
+
+def test_eos_and_cancellation(mesh16, plan16):
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    prompt = [3, 14, 15]
+    [probe] = generate(eng, [prompt], SamplingParams(max_tokens=4))
+    first = probe.tokens[0]
+
+    # same prompt with that token as EOS stops immediately ("stop", not
+    # "length"), still reporting the EOS token
+    [stopped] = generate(eng, [prompt],
+                         SamplingParams(max_tokens=4, eos_token_id=first))
+    assert stopped.finish_reason == "stop" and stopped.tokens == [first]
+
+    # cancellation mid-flight frees the slot and marks the request
+    r1 = eng.submit(prompt, SamplingParams(max_tokens=8))
+    r2 = eng.submit(prompt, SamplingParams(max_tokens=8))
+    eng.step()
+    assert eng.cancel(r1.request_id)
+    eng.drain()
+    assert r1.state == RequestState.FINISHED \
+        and r1.finish_reason == "cancelled"
+    assert r2.finish_reason == "length" and len(r2.output_tokens) == 8
+    assert eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_submit_validation(mesh16, plan16):
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(30)), SamplingParams(max_tokens=8))  # > s_max
+    with pytest.raises(ValueError):
+        eng.submit([], SamplingParams(max_tokens=1))

@@ -1,0 +1,223 @@
+"""Host-side serving-engine units: block pool + scheduler (no mesh)."""
+
+import pytest
+
+from repro.serve.engine.block_cache import (BlockPool, PoolExhausted,
+                                            SequenceBlocks)
+from repro.serve.engine.request import Request, RequestState, SamplingParams
+from repro.serve.engine.scheduler import Scheduler, SchedulerConfig
+
+
+# ---------------------------------------------------------------------------
+# BlockPool
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_release_recycles_through_free_list():
+    pool = BlockPool(2, 4)
+    a = pool.alloc()
+    b = pool.alloc()
+    assert {a, b} == {0, 1} and pool.n_free == 0
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.release(a)
+    assert pool.n_free == 1
+    assert pool.alloc() == a          # recycled, not a fresh id
+
+
+def test_pool_refcounts_and_double_free():
+    pool = BlockPool(1, 4)
+    bid = pool.alloc()
+    pool.retain(bid)
+    pool.release(bid)
+    assert pool.n_free == 0           # still held by the second ref
+    pool.release(bid)
+    assert pool.n_free == 1
+    with pytest.raises(ValueError):
+        pool.release(bid)
+    with pytest.raises(ValueError):
+        pool.retain(bid)
+
+
+def test_pool_blocks_for_quantizes_by_stride():
+    pool = BlockPool(8, 4)
+    assert [pool.blocks_for(n) for n in (0, 1, 4, 5, 8, 9)] == \
+        [0, 1, 1, 2, 2, 3]
+
+
+def test_sequence_blocks_ensure_is_atomic():
+    pool = BlockPool(2, 2)
+    seq = SequenceBlocks(pool)
+    seq.ensure(3)                     # 2 blocks
+    assert len(seq.ids) == 2 and seq.capacity == 4
+    with pytest.raises(PoolExhausted):
+        seq.ensure(5)                 # would need a 3rd block
+    assert len(seq.ids) == 2 and pool.n_free == 0   # nothing half-allocated
+    seq.release_all()
+    assert pool.n_free == 2 and seq.ids == []
+
+
+def test_sequence_fork_shares_blocks_by_refcount():
+    pool = BlockPool(4, 2)
+    a = SequenceBlocks(pool)
+    a.ensure(4)
+    b = a.fork()
+    assert b.ids == a.ids and pool.n_used == 2
+    a.release_all()
+    assert pool.n_used == 2           # still referenced by the fork
+    b.release_all()
+    assert pool.n_free == 4
+
+
+def test_prefix_hooks_retain_and_invalidate():
+    pool = BlockPool(2, 4)
+    bid = pool.alloc()
+    pool.publish_prefix((1, 2, 3, 4), bid)
+    got = pool.lookup_prefix((1, 2, 3, 4))
+    assert got == bid and pool.refcount(bid) == 2
+    pool.release(bid)
+    pool.release(bid)                 # last ref: freed + prefix dropped
+    assert pool.lookup_prefix((1, 2, 3, 4)) is None
+
+
+# ---------------------------------------------------------------------------
+# Request state machine
+# ---------------------------------------------------------------------------
+
+def test_request_transitions_enforced():
+    r = Request([1, 2, 3])
+    with pytest.raises(ValueError):
+        r.transition(RequestState.DECODE)      # must prefill first
+    r.transition(RequestState.PREFILL)
+    r.transition(RequestState.DECODE)
+    r.preempt()                                # back to WAITING, cache dropped
+    assert r.state == RequestState.WAITING and r.num_cached == 0 \
+        and r.n_preemptions == 1
+    r.finish("cancelled")
+    with pytest.raises(ValueError):
+        r.transition(RequestState.PREFILL)
+
+
+def test_request_feed_and_sample_schedule():
+    r = Request([7, 8, 9], SamplingParams(max_tokens=2))
+    r.transition(RequestState.PREFILL)
+    fed = []
+    for tok in (7, 8, 9):             # prompt replay: sample only on the last
+        assert r.next_token == tok
+        assert r.samples_this_step == (tok == 9)
+        r.num_cached += 1
+    r.output_tokens.append(42)
+    assert r.next_token == 42 and r.samples_this_step   # steady-state decode
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def _sched(n_blocks=64, stride=2, buckets=(1, 2, 4)):
+    return Scheduler(BlockPool(n_blocks, stride), SchedulerConfig(buckets))
+
+
+def _advance(sd):
+    """Emulate the engine's per-step bookkeeping (no device work)."""
+    for r in sd.slots:
+        if r is not None:
+            if r.samples_this_step:
+                r.output_tokens.append(0)
+                if r.state == RequestState.PREFILL:
+                    r.transition(RequestState.DECODE)
+            r.num_cached += 1
+
+
+def test_bucket_config_validation():
+    with pytest.raises(ValueError):
+        SchedulerConfig((3, 4))       # not a power of two
+    with pytest.raises(ValueError):
+        SchedulerConfig((4, 2))       # not ascending
+    assert SchedulerConfig((1, 2, 8)).bucket_for(3) == 8
+
+
+def test_admission_buckets_to_smallest_cover():
+    s = _sched()
+    for i in range(3):
+        s.submit(Request([1, 2]))
+    sd = s.schedule()
+    assert sd.bucket == 4 and sum(r is not None for r in sd.slots) == 3
+    assert all(r.state == RequestState.PREFILL for r in sd.admitted)
+    assert sd.is_prefill and all(sd.fresh[s_] for s_, r in
+                                 enumerate(sd.slots) if r is not None)
+
+
+def test_admission_is_fifo_and_respects_max_bucket():
+    s = _sched(buckets=(1, 2))
+    reqs = [Request([1]) for _ in range(3)]
+    for r in reqs:
+        s.submit(r)
+    sd = s.schedule()
+    assert sd.bucket == 2
+    assert set(sd.slots) == set(reqs[:2])      # first two in, third waits
+    assert s.waiting[0] is reqs[2]
+
+
+def test_shrink_compacts_slots_and_reports_migration_map():
+    s = _sched()
+    reqs = [Request([1, 2]) for _ in range(4)]
+    for r in reqs:
+        s.submit(r)
+    sd = s.schedule()
+    assert sd.bucket == 4
+    _advance(sd)
+    s.complete(reqs[0], "stop")
+    s.complete(reqs[2], "stop")
+    sd2 = s.schedule()
+    assert sd2.bucket == 2
+    # survivor at old slot 1 stays; old slot 3 compacts into slot 0
+    assert sd2.slots[1] is reqs[1] and sd2.slot_map[1] == 1
+    assert sd2.slots[0] is reqs[3] and sd2.slot_map[0] == 3
+    assert not sd2.fresh[0] and not sd2.fresh[1]
+
+
+def test_preemption_on_pool_exhaustion_evicts_youngest():
+    # 4 blocks of stride 2 = 8 positions total; two requests of prompt 2
+    # fill it after a few decode steps, forcing the younger one out
+    s = _sched(n_blocks=4, stride=2, buckets=(1, 2))
+    a, b = Request([1, 2]), Request([3, 4])
+    s.submit(a)
+    s.submit(b)
+    preempted = []
+    for _ in range(6):
+        sd = s.schedule()
+        preempted += sd.preempted
+        _advance(sd)
+        if preempted:
+            break
+    assert preempted and preempted[0] is b     # youngest evicted
+    assert b.state == RequestState.WAITING and b.num_cached == 0
+    assert b.n_preemptions == 1
+    assert s.waiting[0] is b                   # re-admitted first, later
+    assert a in s.running                      # oldest kept making progress
+
+
+def test_single_oversized_sequence_raises_instead_of_livelock():
+    s = _sched(n_blocks=2, stride=2, buckets=(1,))
+    r = Request([1, 2, 3])                     # 3 tokens -> needs 2 blocks
+    s.submit(r)
+    for _ in range(4):                         # positions 1..4 fit the pool
+        sd = s.schedule()
+        _advance(sd)
+    with pytest.raises(RuntimeError):          # 5th position needs 3rd block
+        s.schedule()
+
+
+def test_cancel_waiting_and_running():
+    s = _sched()
+    a, b = Request([1]), Request([2])
+    s.submit(a)
+    s.submit(b)
+    sd = s.schedule()
+    assert s.cancel(b.request_id)
+    assert b.state == RequestState.FINISHED \
+        and b.finish_reason == "cancelled"
+    assert b not in s.running and s.pool.n_used == s.pool.blocks_for(2)
+    assert not s.cancel("no-such-request")
+    assert s.cancel(a.request_id) and not s.has_work
+    assert s.pool.n_free == s.pool.n_blocks
