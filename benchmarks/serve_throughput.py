@@ -2,15 +2,21 @@
 
 Drives a mixed-length request workload through ``ServingEngine`` and reports
 tokens/sec derived from the CommandQueue's ``KernelEvent`` timestamps (the
-OpenCL-event view of the run), plus per-bucket launch/flop/collective stats.
+OpenCL-event view of the run), per-bucket launch/flop/collective stats, and
+paged-KV residency (peak block-pool occupancy + bytes resident).
 
 Standalone:
   XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
   PYTHONPATH=src python benchmarks/serve_throughput.py
+
+``--steps N`` runs a smoke pass: the workload is submitted but only N engine
+steps execute (one bucket executable compiles, no warm-up) — CI uses this to
+keep the benchmark path from rotting without paying a full run.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -40,7 +46,7 @@ def _workload(rng, vocab):
     return prompts, sampling
 
 
-def run(report):
+def run(report, steps=None):
     cfg = ModelConfig(name="srv-bench", family="dense", d_model=128,
                       n_layers=4, n_heads=8, n_kv_heads=4, d_ff=512,
                       vocab_size=1024, param_dtype=jnp.float32,
@@ -53,19 +59,27 @@ def run(report):
     eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
 
     prompts, sampling = _workload(np.random.default_rng(0), cfg.vocab_size)
-    # warm EVERY bucket executable, then zero all counters so the timed pass
-    # reports steady-state work only
-    for b in ec.buckets:
-        generate(eng, prompts[:b], SamplingParams(max_tokens=1))
-    eng.stats = EngineStats()
-    eng.queue.max_depth = 0
-    for ev in eng.kernel_events().values():
-        ev.launches = 0
-        ev.first_enqueue_t = ev.last_enqueue_t = ev.last_done_t = 0.0
+    if steps is not None:
+        # smoke pass: submit everything, run exactly `steps` step kernels
+        for p, s in zip(prompts, sampling):
+            eng.submit(p, s)
+        for _ in range(steps):
+            if not eng.step():
+                break
+    else:
+        # warm EVERY bucket executable, then zero all counters so the timed
+        # pass reports steady-state work only
+        for b in ec.buckets:
+            generate(eng, prompts[:b], SamplingParams(max_tokens=1))
+        eng.stats = EngineStats()
+        eng.queue.max_depth = 0
+        for ev in eng.kernel_events().values():
+            ev.launches = 0
+            ev.first_enqueue_t = ev.last_enqueue_t = ev.last_done_t = 0.0
 
-    outs = generate(eng, prompts, sampling)
-    assert all(len(c.tokens) == s.max_tokens
-               for c, s in zip(outs, sampling))
+        outs = generate(eng, prompts, sampling)
+        assert all(len(c.tokens) == s.max_tokens
+                   for c, s in zip(outs, sampling))
 
     tok_s = eng.throughput_tok_s()
     report("serve.engine.tokens_per_sec", f"{tok_s:.1f}",
@@ -77,7 +91,12 @@ def run(report):
     report("serve.engine.prefill_launches", eng.stats.prefill_launches, "")
     report("serve.engine.decode_launches", eng.stats.decode_launches, "")
     report("serve.engine.migrations", eng.stats.migrations,
-           "bucket/slot cache moves")
+           "host-side table permutations (no device KV copies)")
+    report("serve.engine.peak_kv_blocks_used", eng.stats.peak_blocks_used,
+           f"of {eng.pool.n_blocks} pool blocks "
+           f"(stride {eng.pool.block_pos_stride})")
+    report("serve.engine.peak_kv_bytes_resident", eng.peak_kv_bytes(),
+           f"{eng.pool.layout.bytes_per_block} B/page arena footprint")
     for name, ev in sorted(eng.kernel_events().items()):
         report(f"serve.event.{name}.launches", ev.launches, "")
         report(f"serve.event.{name}.gflops_per_launch",
@@ -88,12 +107,16 @@ def run(report):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None,
+                    help="smoke mode: run only N engine steps")
+    args = ap.parse_args()
     print("name,value,derived")
 
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
-    run(report)
+    run(report, steps=args.steps)
 
 
 if __name__ == "__main__":

@@ -103,27 +103,42 @@ class CommandQueue:
         return len(self._compiled)
 
     def build(self, kernel: HybridKernel, *example_args) -> Any:
-        """clBuildProgram: lower + compile for this mesh, record cost stats."""
+        """clBuildProgram: lower + compile for this mesh, record cost stats.
+
+        ``build_time_s`` accumulates across rebuilds, but per-launch cost
+        stats (flops / bytes / collective bytes) are stamped on the FIRST
+        build only: a rebuild of the same kernel name must not clobber the
+        record callers may already be aggregating against.
+        """
         t0 = time.perf_counter()
         fn = kernel.bind(self.mesh)
         lowered = fn.lower(*example_args)
         compiled = lowered.compile()
         ev = self.events.setdefault(kernel.name, KernelEvent(kernel.name))
         ev.build_time_s += time.perf_counter() - t0
-        try:
-            cost = compiled.cost_analysis()
-            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
-            ev.flops = float(cost.get("flops", 0.0))
-            ev.bytes_accessed = float(cost.get("bytes accessed", 0.0))
-        except Exception:  # cost analysis is best-effort on some backends
-            pass
-        # optimized HLO (dash-form op names); stablehlo uses underscores
-        ev.collective_bytes = collective_bytes_from_hlo(compiled.as_text())
+        if kernel.name not in self._compiled:
+            try:
+                cost = compiled.cost_analysis()
+                cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+                ev.flops = float(cost.get("flops", 0.0))
+                ev.bytes_accessed = float(cost.get("bytes accessed", 0.0))
+            except Exception:  # cost analysis is best-effort on some backends
+                pass
+            # optimized HLO (dash-form op names); stablehlo uses underscores
+            ev.collective_bytes = collective_bytes_from_hlo(compiled.as_text())
         self._compiled[kernel.name] = compiled
         return compiled
 
     def enqueue(self, kernel: HybridKernel, *args):
-        """clEnqueueNDRangeKernel: async dispatch; returns device futures."""
+        """clEnqueueNDRangeKernel: async dispatch; returns device futures.
+
+        Donated operands (``kernel.donate``) may flow between enqueues of
+        DIFFERENT kernels: an output of one executable is a legal donated
+        input to the next as long as shape/sharding match — the serving
+        engine threads its bucket-invariant paged KV arena through every
+        ``serve_step_bs{N}`` this way, so the arena is one allocation for
+        the queue's whole lifetime.
+        """
         if kernel.name not in self._compiled:
             self.build(kernel, *args)
         out = self._compiled[kernel.name](*args)

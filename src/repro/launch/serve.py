@@ -93,10 +93,17 @@ def main():
 def _main_engine(cfg, mesh, plan, args):
     from repro.serve.engine import (EngineConfig, SamplingParams,
                                     build_engine, generate)
-    s_max = -(-max(args.s_max, args.tokens + 12) // 4) * 4  # gemv: s_max % q
+    if any(mixer != "attn" for mixer, _ in cfg.pattern()):
+        raise SystemExit(
+            f"--engine pages attention KV only; {args.arch} has SSM layers "
+            "(use the fixed-batch path: drop --engine)")
+    # paged engine: s_max must be a multiple of the KV page stride
+    stride = 16
+    s_max = -(-max(args.s_max, args.tokens + 12) // stride) * stride
     buckets = tuple(b for b in (1, 2, 4, 8) if b <= max(args.batch, 1))
     eng = build_engine(cfg, mesh, plan, seed=0,
-                       engine_cfg=EngineConfig(s_max=s_max, buckets=buckets))
+                       engine_cfg=EngineConfig(s_max=s_max, buckets=buckets,
+                                               block_pos_stride=stride))
     rng = np.random.default_rng(0)
     vocab = min(cfg.vocab_size, 256)
     prompts = [rng.integers(0, vocab,

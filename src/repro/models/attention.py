@@ -106,17 +106,25 @@ def attention_partial(q, k, v, *, kv_pos, q_pos, scale=None) -> AttnPartial:
 
     ``q_pos`` is (Sq,) shared across the batch, or (B, Sq) per-sequence
     positions (continuous-batching decode, where every slot sits at its own
-    position)."""
+    position).  ``kv_pos`` is (Skv,) shared, or (B, Skv) per-sequence —
+    paged decode gathers a different set of KV pages per slot, so each
+    slot carries its own position (and validity) labels; unallocated page
+    entries are given positions beyond any q_pos, which the causal mask
+    removes."""
     B, Hq, Sq, D = q.shape
     group = Hq // k.shape[1]
     scale = scale if scale is not None else D ** -0.5
     kr = jnp.repeat(k, group, axis=1).astype(jnp.float32)
     vr = jnp.repeat(v, group, axis=1).astype(jnp.float32)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kr)
-    if q_pos.ndim == 1:
+    if q_pos.ndim == 1 and kv_pos.ndim == 1:
         mask = (q_pos[:, None] >= kv_pos[None, :])[None, None]
-    else:
+    elif q_pos.ndim == 1:                       # kv_pos (B, Skv)
+        mask = (q_pos[None, :, None] >= kv_pos[:, None, :])[:, None]
+    elif kv_pos.ndim == 1:                      # q_pos (B, Sq)
         mask = (q_pos[:, :, None] >= kv_pos[None, None, :])[:, None]
+    else:                                       # both per-sequence
+        mask = (q_pos[:, :, None] >= kv_pos[:, None, :])[:, None]
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])

@@ -47,6 +47,63 @@ from repro.train.step import make_pctx
 # Cache specs.
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    """Physically paged KV arena layout.
+
+    One arena `(G, n_pes, ceil(n_blocks/q), block_pos_stride, kvh, hd)` is
+    shared by every batch bucket: physical page ``p`` lives on grid row
+    ``p % q`` at local index ``p // q`` (columns shard kv heads as usual).
+    Step kernels address it through a per-slot **block table** operand
+    ``(B, s_max // block_pos_stride)`` of physical page ids (-1 =
+    unallocated), so sequence identity lives entirely in host-built tables —
+    slot migration, prefix sharing and ``fork()`` never touch device KV.
+    """
+
+    n_blocks: int                # physical pages across the whole arena
+    block_pos_stride: int        # cache positions per page
+
+    def __post_init__(self):
+        if self.n_blocks < 1:
+            raise ValueError("n_blocks must be >= 1")
+        if self.block_pos_stride < 1:
+            raise ValueError("block_pos_stride must be >= 1")
+
+    def blocks_local(self, q: int) -> int:
+        """Per-PE page count (rows shard the physical id space)."""
+        return -(-self.n_blocks // q)
+
+
+def paged_cache_specs(cfg: ModelConfig, plan: MeshPlan,
+                      paged: PagedKV) -> Any:
+    """ShapeDtypeStruct pytree for the bucket-independent paged KV arena."""
+    q, r = plan.grid_q, plan.grid_r
+    n_pes = q * r
+    G = cfg.n_groups()
+    if cfg.enc_layers:
+        raise NotImplementedError("paged KV: encoder cross caches are dense")
+    kvh = cfg.kv_stored(r)[0] // r
+    hd = cfg.hd()
+    dt = cfg.compute_dtype
+    shape = (G, n_pes, paged.blocks_local(q), paged.block_pos_stride, kvh, hd)
+    entries = []
+    for (mixer, ffn) in cfg.pattern():
+        if mixer != "attn":
+            raise NotImplementedError(
+                f"paged KV covers attention mixers only, got {mixer!r} "
+                "(SSM state is O(1) per slot and needs no paging)")
+        entries.append({"k": jax.ShapeDtypeStruct(shape, dt),
+                        "v": jax.ShapeDtypeStruct(shape, dt)})
+    return entries
+
+
+def paged_cache_pspecs(cfg: ModelConfig) -> Any:
+    """Arena boundary specs: pages are row-sharded *inside* the flat MODEL
+    axis (dim 1), never batch-sharded — the arena is bucket-independent."""
+    return [{"k": P(None, MODEL), "v": P(None, MODEL)}
+            for _ in cfg.pattern()]
+
+
 def cache_specs(cfg: ModelConfig, plan: MeshPlan, batch: int, s_max: int,
                 mode: str) -> Any:
     """ShapeDtypeStruct pytree for the decode cache (dry-run + init)."""
@@ -255,6 +312,72 @@ def _attn_decode_longctx(pctx, p, x, cfg, kc, vc, pos, shard_offset,
     return y, kc, vc
 
 
+def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride):
+    """Paged-arena decode attention (gemv projections, weights stationary).
+
+    x (B, 1, D_loc) replicated over rows; kc/vc (n_blocks_local, stride,
+    kvh_loc, hd) — this PE (row i) owns physical pages ``p % q == i``.
+    ``table`` (B, T) holds each slot's physical page ids (-1 = unallocated).
+    The new token's K/V scatters into ``table[pos // stride]`` at offset
+    ``pos % stride`` on the owner row; attention gathers each slot's pages
+    locally and the per-row partials merge with the flash-decoding LSE
+    reduction (each position is owned by exactly one row).  ``pos`` may be
+    scalar (single-shot) or (B,) (continuous batching)."""
+    B = x.shape[0]
+    grid = pctx.grid
+    i, _ = grid.my_coords()
+    qrows = pctx.q
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hkv_loc = cfg.n_kv_stored // pctx.r
+    hd = cfg.head_dim
+    biases = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+    q, k, v = fused_dense(pctx, x, [p["wq"], p["wk"], p["wv"]], biases=biases)
+    q = q.reshape(B, 1, hq_loc, hd)
+    k = k.reshape(B, 1, hkv_loc, hd)
+    v = v.reshape(B, 1, hkv_loc, hd)
+    if cfg.qk_norm:
+        q = rms_norm_local(q, p["q_norm"])
+        k = rms_norm_local(k, p["k_norm"])
+    q, k = _rope_decode(q, k, pos, hd, cfg.rope_theta)
+
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    n_loc = kc.shape[0]
+    # scatter the new K/V into its table page (owner row only; slots whose
+    # write page lives elsewhere — or idle slots with table entry -1 — are
+    # routed out of bounds and dropped)
+    pid_w = jnp.take_along_axis(table, (posv // stride)[:, None], axis=1)[:, 0]
+    mine_w = (pid_w >= 0) & (pid_w % qrows == i)
+    li_w = jnp.where(mine_w, pid_w // qrows, n_loc)
+    off_w = posv % stride
+    kc = kc.at[li_w, off_w].set(k[:, 0].astype(kc.dtype), mode="drop")
+    vc = vc.at[li_w, off_w].set(v[:, 0].astype(vc.dtype), mode="drop")
+
+    # gather this row's pages of every slot; entries this row does not own
+    # get positions past any query so the causal mask removes them
+    T = table.shape[1]
+    own = (table >= 0) & (table % qrows == i)               # (B, T)
+    lg = jnp.where(own, table // qrows, 0).reshape(-1)
+    kg = jnp.take(kc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
+    vg = jnp.take(vc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
+    pos_grid = jnp.arange(T)[:, None] * stride + jnp.arange(stride)[None, :]
+    kv_pos = jnp.where(own[:, :, None], pos_grid[None],
+                       jnp.int32(2 ** 30)).reshape(B, T * stride)
+    q_pos = jnp.reshape(pos, (1,)) if jnp.ndim(pos) == 0 else pos[:, None]
+    part = attention_partial(
+        q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
+        vg.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=q_pos)
+
+    def reduce_max(t):
+        groups = [[ii * grid.r + jj for ii in range(grid.q)]
+                  for jj in range(grid.r)]
+        return lax.pmax(t, grid.axis, axis_index_groups=groups)
+
+    out = combine_partials(part, reduce_max, grid.psum_rows)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
+    y = dense(pctx, out.astype(x.dtype), p["wo"])
+    return y, kc, vc
+
+
 # ---------------------------------------------------------------------------
 # Decode layer + step.
 # ---------------------------------------------------------------------------
@@ -276,11 +399,16 @@ def _cross_decode(pctx, p, x, cfg, ck, cv):
     return dense(pctx, out.astype(x.dtype), p["wo"])
 
 
-def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode):
+def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
+                  table=None, paged=None):
     ast = attn_static(cfg, pctx.r) if mixer == "attn" else None
     if mixer == "attn":
         h = _norm(pctx, cfg, p["norm1"], x)
-        if mode == "batched":
+        if paged is not None:
+            h, kc, vc = _attn_decode_paged(pctx, p["mixer"], h, ast,
+                                           cache["k"], cache["v"], pos,
+                                           table, paged.block_pos_stride)
+        elif mode == "batched":
             h, kc, vc = _attn_decode_batched(pctx, p["mixer"], h, ast,
                                              cache["k"], cache["v"], pos)
         else:
@@ -344,7 +472,8 @@ def _last_logits(pctx, lm_head_blk, x, gather_rows: bool):
 def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                      batch: int, s_max: int, mode: str = "batched",
                      tp_strategy: Optional[str] = None,
-                     per_slot: bool = False):
+                     per_slot: bool = False,
+                     paged: Optional[PagedKV] = None):
     """Device-level decode step body + boundary specs (un-mapped).
 
     Returns ``(body, in_specs, out_specs, specs, pctx)`` so callers can either
@@ -352,11 +481,18 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     :class:`repro.core.hybrid.HybridKernel` and enqueue it on a
     ``CommandQueue`` (the serving engine).
 
-    With ``per_slot=True`` the step takes vector ``pos`` (B,) and ``reset``
-    (B,) operands: each batch slot advances from its own position, and slots
-    flagged in ``reset`` have their cache entries zeroed before the step —
-    which is how the continuous-batching engine recycles slots without a
-    second compiled executable.
+    With ``per_slot=True`` the step takes vector ``pos`` (B,) operands: each
+    batch slot advances from its own position.  Dense per-slot steps
+    additionally take a ``reset`` (B,) operand wiping recycled slots
+    in-kernel; paged steps don't need it — a fresh slot simply points its
+    block table at freshly allocated pages, and stale page contents beyond
+    the slot's position are causally masked.
+
+    With ``paged`` set (gemv mode only) the cache operand is the
+    bucket-independent physically paged arena of :func:`paged_cache_specs`
+    and the step takes a trailing block-table operand
+    ``(B, s_max // block_pos_stride)`` of physical page ids; ``pos`` may be
+    scalar or per-slot.
     """
     if tp_strategy is None:
         tp_strategy = "cannon" if mode == "batched" else "gemv"
@@ -378,9 +514,22 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         raise NotImplementedError(
             "per-slot decode needs a data-sharded batch dim "
             "(modes: batched, gemv)")
+    if paged is not None:
+        if mode != "gemv":
+            raise NotImplementedError(
+                "paged KV rides the gemv layout (weights stationary, "
+                f"pages over grid rows): mode={mode!r}")
+        if s_max % paged.block_pos_stride:
+            raise ValueError(
+                f"s_max={s_max} must be a multiple of "
+                f"block_pos_stride={paged.block_pos_stride}")
 
     def body(params, cache, tokens, pos, *extra):
-        reset = extra[0] if per_slot else None
+        table = reset = None
+        if paged is not None:
+            table = extra[0]
+        elif per_slot:
+            reset = extra[0]
         grid = pctx.grid
         i, _ = grid.my_coords()
         x = _embed_decode(pctx, params["embed"], tokens, mode,
@@ -411,15 +560,16 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                 x, nc = _decode_layer(pctx, cfg, mixer, ffn,
                                       group_params[posn], x,
                                       group_cache[posn], pos, shard_offset,
-                                      mode)
+                                      mode, table=table, paged=paged)
                 new_caches.append(nc)
             return x, new_caches
 
         # strip the n_pes dim (shard_map gives local (G, 1, ...) leaves)
         local_cache = jax.tree.map(lambda c: c[:, 0], cache)
-        if per_slot:
+        if per_slot and paged is None:
             # recycled slots start from a clean cache (slot-reset is folded
-            # into the step so each bucket keeps a single executable)
+            # into the step so each bucket keeps a single executable).
+            # Paged steps need no reset: slot identity lives in the table.
             def _wipe(c):
                 sel = reset.reshape((1, -1) + (1,) * (c.ndim - 2)) > 0
                 return jnp.where(sel, jnp.zeros((), c.dtype), c)
@@ -433,12 +583,16 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         return logits, new_cache
 
     pspecs = pm.param_pspecs(specs)
-    cpspecs = cache_pspecs(cfg, mode, pctx.data_axes)
+    cpspecs = paged_cache_pspecs(cfg) if paged is not None \
+        else cache_pspecs(cfg, mode, pctx.data_axes)
     lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
         else pctx.data_axes[0]
     tok_spec = P() if mode == "longctx" else P(lead)
     logit_spec = P() if mode == "longctx" else P(lead, None, None)
-    if per_slot:
+    if paged is not None:
+        pos_spec = tok_spec if per_slot else P()
+        in_specs = (pspecs, cpspecs, tok_spec, pos_spec, P(lead, None))
+    elif per_slot:
         in_specs = (pspecs, cpspecs, tok_spec, tok_spec, tok_spec)
     else:
         in_specs = (pspecs, cpspecs, tok_spec, P())
@@ -448,18 +602,21 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
 def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                      batch: int, s_max: int, mode: str = "batched",
                      tp_strategy: Optional[str] = None,
-                     per_slot: bool = False):
-    """serve_step(params, cache, tokens, pos[, reset]) -> (logits, cache).
+                     per_slot: bool = False,
+                     paged: Optional[PagedKV] = None):
+    """serve_step(params, cache, tokens, pos[, reset|table]) -> (logits, cache).
 
     ``mode="batched"``: tokens (B,) sharded over data; Cannon projections.
     ``mode="longctx"``: tokens (B,) replicated; gemv2d projections over
     UNSKEWED weights (pass tp_strategy="allgather"-storage params).
     ``per_slot=True``: ``pos``/``reset`` are (B,) vectors sharded like
     ``tokens`` (continuous-batching step; see :func:`make_decode_body`).
+    ``paged``: the cache operand is the physically paged arena and the
+    trailing operand is the (B, T) block table (see :class:`PagedKV`).
     """
     body, in_specs, out_specs, specs, pctx = make_decode_body(
         cfg, mesh, plan, batch=batch, s_max=s_max, mode=mode,
-        tp_strategy=tp_strategy, per_slot=per_slot)
+        tp_strategy=tp_strategy, per_slot=per_slot, paged=paged)
     mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
     return jax.jit(mapped, donate_argnums=(1,)), specs, pctx

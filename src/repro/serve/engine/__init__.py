@@ -3,10 +3,18 @@
 Layering (host side of the paper's OpenCL analogy):
 
     api.generate()            synchronous facade
-      engine.ServingEngine    drive loop: one kernel enqueue per step
-        scheduler.Scheduler   bucketed admission / preemption policy
-          block_cache.BlockPool   paged KV accounting (ref-counts, free list)
+      engine.ServingEngine    drive loop: one kernel enqueue per step,
+                              block tables as kernel operands
+        scheduler.Scheduler   bucketed admission / preemption policy,
+                              prefix-page adoption
+          block_cache.BlockPool   physical KV pages (ref-counts, free list,
+                                  generation-checked prefix cache)
           request.Request     WAITING -> PREFILL -> DECODE -> FINISHED
+
+The KV cache is ONE physically paged arena shared by every batch bucket
+(``repro.serve.decode.paged_cache_specs``); pool ids are arena indices and
+the per-bucket step kernels gather/scatter KV through per-slot block-table
+operands (docs/serving.md).
 """
 
 from repro.serve.engine.api import Completion, build_engine, generate

@@ -1,20 +1,28 @@
-"""Paged KV block pool: ref-counted pages over the dense device cache.
+"""Paged KV block pool: ref-counted physical pages of the device arena.
 
-SHARK's serving ``Cache`` hands out ``BlockCacheEntry`` pages of
-``block_pos_stride`` positions and lets compiled entrypoints consume block
-index tables.  Here the *physical* KV lives in the dense
-``(groups, n_pes, B_bucket, S, kvh, hd)`` arrays of ``serve/decode.py`` (one
-arena per batch bucket), so the pool is the host-side ownership layer over
-that arena:
+Since the paged refactor, pool ids ARE physical arena indices: the device
+cache is one arena ``(groups, n_pes, ceil(n_blocks/q), block_pos_stride,
+kvh, hd)`` (``repro.serve.decode.paged_cache_specs``) shared by every batch
+bucket, and the step kernels consume per-slot block tables of these ids.
+The pool is the host-side ownership layer over that arena:
 
-  * capacity   — ``n_blocks`` quantizes total KV memory; the scheduler admits
-                 and preempts against it, exactly as it would against a
-                 physically paged arena;
-  * ref-counts — blocks are shared by forked sequences (prefix-sharing hook)
+  * capacity   — ``n_blocks`` IS total KV memory; the scheduler admits and
+                 preempts against it;
+  * ref-counts — pages are shared by forked sequences and identical prompt
+                 prefixes (the sharing is physical: one page, many tables),
                  and recycled through a free list on last release;
-  * layout     — :func:`block_layout` derives the per-block device footprint
-                 from the same ``cache_specs`` boundary shapes the kernels
-                 compile against, so pool sizing tracks the real cache.
+  * prefixes   — ``publish_prefix``/``lookup_prefix`` map full-page prompt
+                 prefixes to resident pages.  A freed page keeps its prefix
+                 entries until the page is *reallocated* (a per-page
+                 generation counter detects recycling), so a later identical
+                 prompt can revive it and adopt the KV already in device
+                 memory — nothing ever zeroes arena pages, and stale
+                 contents past a sequence's position are causally masked
+                 in-kernel;
+  * layout     — :func:`block_layout` derives the per-page device footprint
+                 from the same ``paged_cache_specs`` shapes the kernels
+                 compile against, so occupancy-in-bytes tracks the real
+                 arena.
 
 Pure host code: no jax arrays are touched here.
 """
@@ -22,7 +30,8 @@ Pure host code: no jax arrays are touched here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 
 class PoolExhausted(Exception):
@@ -32,7 +41,7 @@ class PoolExhausted(Exception):
 @dataclasses.dataclass(frozen=True)
 class BlockLayout:
     """Device footprint of one KV page (``block_pos_stride`` positions of one
-    sequence slot, across all layer groups and PEs)."""
+    sequence, across all layer groups and the PEs that store it)."""
 
     block_pos_stride: int
     bytes_per_block: int
@@ -40,17 +49,35 @@ class BlockLayout:
 
 
 def block_layout(cfg, plan, *, block_pos_stride: int,
-                 mode: str = "gemv") -> BlockLayout:
-    """Derive the per-block byte footprint from the decode cache specs.
+                 mode: str = "paged") -> BlockLayout:
+    """Derive the per-page byte footprint from the decode cache specs.
 
-    Uses the exact ``cache_specs`` pytree that the step kernels compile
-    against — the (groups, n_pes, ...) boundary layout — scaled down to one
-    slot and ``block_pos_stride`` positions.
+    ``mode="paged"`` (the engine's layout) divides the physical arena's
+    total bytes by its page count; the dense modes scale the boundary-shape
+    ``cache_specs`` down to one slot and ``block_pos_stride`` positions.
     """
     import numpy as np
-    from repro.serve.decode import cache_specs
 
     q = plan.grid_q
+
+    def _nbytes(entries):
+        total = 0
+        for entry in entries:
+            for leaf in entry.values():
+                total += int(np.prod(leaf.shape)) * \
+                    np.dtype(leaf.dtype).itemsize
+        return total
+
+    if mode == "paged":
+        from repro.serve.decode import PagedKV, paged_cache_specs
+        # one page per grid row -> arena bytes / q = bytes per physical page
+        entries = paged_cache_specs(
+            cfg, plan, PagedKV(n_blocks=q, block_pos_stride=block_pos_stride))
+        return BlockLayout(block_pos_stride=block_pos_stride,
+                           bytes_per_block=_nbytes(entries) // q,
+                           mode=mode)
+
+    from repro.serve.decode import cache_specs
     dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
     # minimal legal (batch, s_max) for the mode's divisibility rules
     if mode == "batched":
@@ -60,11 +87,7 @@ def block_layout(cfg, plan, *, block_pos_stride: int,
         b0, s0 = dshards * q, block_pos_stride * q
         positions = block_pos_stride * q
     entries = cache_specs(cfg, plan, b0, s0, mode)
-    total = 0
-    for entry in entries:
-        for leaf in entry.values():
-            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
-    per_slot_per_pos = total / (b0 * positions)
+    per_slot_per_pos = _nbytes(entries) / (b0 * positions)
     return BlockLayout(block_pos_stride=block_pos_stride,
                        bytes_per_block=int(per_slot_per_pos
                                            * block_pos_stride),
@@ -72,7 +95,8 @@ def block_layout(cfg, plan, *, block_pos_stride: int,
 
 
 class BlockPool:
-    """Fixed pool of KV pages with ref-counting and free-list recycling."""
+    """Fixed pool of physical KV pages: ref-counting, free-list recycling,
+    generation-checked prefix caching."""
 
     def __init__(self, n_blocks: int, block_pos_stride: int,
                  layout: Optional[BlockLayout] = None):
@@ -83,9 +107,16 @@ class BlockPool:
         self.n_blocks = n_blocks
         self.block_pos_stride = block_pos_stride
         self.layout = layout
-        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        # deque: alloc pops the right, release appends the LEFT (O(1)), so
+        # freed prefix-cached pages are recycled last
+        self._free: Deque[int] = deque(range(n_blocks - 1, -1, -1))
         self._refs: List[int] = [0] * n_blocks
-        self._prefix: Dict[Tuple[int, ...], int] = {}
+        self._gen: List[int] = [0] * n_blocks
+        # prefix key -> (page id, generation at publish time); the reverse
+        # index lets alloc() evict a recycled page's stale keys in O(keys)
+        self._prefix: Dict[Tuple[int, ...], Tuple[int, int]] = {}
+        self._published: List[List[Tuple[int, ...]]] = \
+            [[] for _ in range(n_blocks)]
 
     # -- capacity ----------------------------------------------------------
 
@@ -112,6 +143,14 @@ class BlockPool:
                 f"all {self.n_blocks} KV blocks in use")
         bid = self._free.pop()
         self._refs[bid] = 1
+        self._gen[bid] += 1     # any KV previously resident here is dead
+        # evict the recycled page's prefix entries eagerly — the map must
+        # not grow with the number of distinct prompts ever served
+        for key in self._published[bid]:
+            ent = self._prefix.get(key)
+            if ent is not None and ent[0] == bid:
+                del self._prefix[key]
+        self._published[bid] = []
         return bid
 
     def retain(self, bid: int) -> int:
@@ -125,30 +164,61 @@ class BlockPool:
             raise ValueError(f"double free of block {bid}")
         self._refs[bid] -= 1
         if self._refs[bid] == 0:
-            self._free.append(bid)
-            # lazily invalidate published prefixes resolving to this block
-            self._prefix = {k: v for k, v in self._prefix.items() if v != bid}
+            # bottom of the free deque: freed pages are recycled LAST,
+            # keeping their (still-valid) prefix KV revivable for as long
+            # as capacity allows
+            self._free.appendleft(bid)
 
     def refcount(self, bid: int) -> int:
         return self._refs[bid]
 
-    # -- prefix sharing hooks ----------------------------------------------
+    # -- prefix sharing ----------------------------------------------------
     #
-    # With a physically paged arena these let a new request adopt the KV
-    # pages of an identical prompt prefix; with the dense arena they still
-    # dedupe *accounting* for forked sequences (n>1 sampling from one
-    # prompt).  Keys are full token tuples of the positions a block covers.
+    # Keys are full token tuples of the positions a page covers.  A lookup
+    # hit hands back the page with a fresh reference: the adopting sequence
+    # points its block table at the SAME physical page, so identical prompt
+    # prefixes (and `fork()` siblings) share device memory, not just
+    # accounting.
 
     def publish_prefix(self, key: Tuple[int, ...], bid: int) -> None:
         if self._refs[bid] <= 0:
             raise ValueError(f"publishing free block {bid}")
-        self._prefix[tuple(key)] = bid
+        key = tuple(key)
+        prev = self._prefix.get(key)
+        self._prefix[key] = (bid, self._gen[bid])
+        if prev != (bid, self._gen[bid]):   # re-publish: no duplicate index
+            self._published[bid].append(key)
+
+    def peek_prefix(self, key: Tuple[int, ...]) -> Optional[bool]:
+        """Would :meth:`lookup_prefix` hit?  Returns None on a miss, else
+        whether the hit would REVIVE a freed page (consuming a free slot).
+        Pure read: no refcount, free-list or map mutation — schedulers use
+        it to cost an admission before committing to page retention."""
+        ent = self._prefix.get(tuple(key))
+        if ent is None:
+            return None
+        bid, gen = ent
+        if gen != self._gen[bid]:
+            return None
+        return self._refs[bid] == 0
 
     def lookup_prefix(self, key: Tuple[int, ...]) -> Optional[int]:
-        bid = self._prefix.get(tuple(key))
-        if bid is None or self._refs[bid] <= 0:
+        ent = self._prefix.get(tuple(key))
+        if ent is None:
             return None
-        return self.retain(bid)
+        bid, gen = ent
+        if gen != self._gen[bid]:
+            del self._prefix[tuple(key)]    # page was recycled: KV is gone
+            return None
+        if self._refs[bid] > 0:
+            return self.retain(bid)
+        # freed but not yet recycled: revive it straight off the free list.
+        # remove() is O(n_blocks), but runs only on the admission path (once
+        # per adopted-revived page, never per token) — not worth the ghost-
+        # entry bookkeeping an O(1) scheme needs at realistic pool sizes
+        self._free.remove(bid)
+        self._refs[bid] = 1
+        return bid
 
 
 class SequenceBlocks:
@@ -174,6 +244,12 @@ class SequenceBlocks:
             raise PoolExhausted(
                 f"need {need} blocks, {self.pool.n_free} free")
         self.ids.extend(self.pool.alloc() for _ in range(need))
+
+    def adopt(self, ids: List[int]) -> None:
+        """Seed an empty table with already-retained shared prefix pages."""
+        if self.ids:
+            raise ValueError("adopt() requires an empty table")
+        self.ids = list(ids)
 
     def release_all(self) -> None:
         for bid in reversed(self.ids):

@@ -2,23 +2,32 @@
 
 Every step is one OpenCL-style kernel enqueue: the per-bucket step executable
 (``serve_step_bs{N}``, built once per bucket by ``queue.build``) consumes the
-dense KV arena plus per-slot ``tokens``/``pos``/``reset`` vectors, advances
-every occupied slot by one position, and returns next-token logits.  The host
-loop scatters request tokens in, gathers sampled tokens out, and drives the
-request state machine; ``queue.finish()`` after each launch is the paper's
-``clFinish`` and stamps the ``KernelEvent`` timestamps the throughput
-benchmark reads.
+physically paged KV arena plus per-slot ``tokens``/``pos`` vectors and a
+``(B, T)`` **block table** of physical page ids, advances every occupied slot
+by one position, and returns next-token logits.  The host loop scatters
+request tokens in, gathers sampled tokens out, and drives the request state
+machine; ``queue.finish()`` after each launch is the paper's ``clFinish`` and
+stamps the ``KernelEvent`` timestamps the throughput benchmark reads.
+
+The arena is ONE device allocation shared by every bucket: it is donated
+through each enqueue — across *different* bucket executables, whose cache
+operand shapes are identical by construction — so a bucket change costs no
+re-zeroing and slot migration is a host-side permutation of the table rows
+(zero device-side KV traffic).  Pool occupancy, not bucket width, bounds
+resident sequences.
 
 Prefill is token-stepped through the same executable (slots still consuming
 prompt tokens simply don't sample), so a bucket never needs a second
 compiled program and mixed prefill/decode batches are the norm, not a
-special case.
+special case.  As prefill fills a full prompt page the engine publishes it
+to the pool's prefix map, so identical prompts — including ``fork()``
+siblings — adopt the same physical pages at admission.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,7 +37,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hybrid import CommandQueue, HybridKernel
 from repro.models import params as pm
-from repro.serve.decode import cache_pspecs, cache_specs, make_decode_body
+from repro.serve.decode import (PagedKV, make_decode_body, paged_cache_pspecs,
+                                paged_cache_specs)
 from repro.serve.engine.block_cache import BlockPool, block_layout
 from repro.serve.engine.request import Request, RequestState, SamplingParams
 from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
@@ -37,7 +47,7 @@ from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    s_max: int = 128                      # cache positions per sequence slot
+    s_max: int = 128                      # max cache positions per sequence
     buckets: Tuple[int, ...] = (1, 2, 4, 8)
     block_pos_stride: int = 16            # positions per KV page
     n_kv_blocks: Optional[int] = None     # pool size; None = fit max batch
@@ -51,7 +61,8 @@ class EngineStats:
     prefill_launches: int = 0
     decode_launches: int = 0
     tokens_generated: int = 0
-    migrations: int = 0
+    migrations: int = 0                   # host-side table permutations only
+    peak_blocks_used: int = 0             # pool occupancy high-water mark
 
 
 class ServingEngine:
@@ -62,28 +73,32 @@ class ServingEngine:
                  engine_cfg: Optional[EngineConfig] = None, seed: int = 0):
         ec = engine_cfg or EngineConfig()
         if ec.mode != "gemv":
-            # per-slot decode also supports "batched", but the engine's
-            # slot migration gathers cache batch rows 1:1 — in batched mode
-            # slots are scattered over grid rows, so migration would move
-            # the wrong KV (ROADMAP open item)
             raise ValueError(
                 f"engine currently serves via mode='gemv' only: {ec.mode!r}")
         q = plan.grid_q
         dshards = plan.data_size * (plan.pod_size if plan.has_pod else 1)
-        if ec.s_max % q:
-            raise ValueError(f"gemv mode needs s_max % {q} == 0: {ec.s_max}")
-        bad = [b for b in ec.buckets if b % dshards]
-        if bad:
+        if dshards != 1:
+            # each data shard would need its own page id space; see ROADMAP
+            # (engine on data-parallel meshes)
+            raise NotImplementedError(
+                f"paged engine requires data_size == 1, got {dshards} shards")
+        if ec.s_max % ec.block_pos_stride:
             raise ValueError(
-                f"buckets {bad} not divisible by the data-shard count "
-                f"{dshards}")
+                f"s_max={ec.s_max} must be a multiple of "
+                f"block_pos_stride={ec.block_pos_stride}")
         self.cfg, self.mesh, self.plan, self.engine_cfg = cfg, mesh, plan, ec
+
+        blocks_per_seq = ec.s_max // ec.block_pos_stride
+        n_blocks = ec.n_kv_blocks or ec.buckets[-1] * blocks_per_seq
+        self.paged = PagedKV(n_blocks=n_blocks,
+                             block_pos_stride=ec.block_pos_stride)
+        self._table_width = blocks_per_seq
 
         # shared lowering metadata: body/specs are batch-polymorphic, only
         # the compiled executables are per-bucket
         _, _, _, specs, pctx = make_decode_body(
             cfg, mesh, plan, batch=ec.buckets[-1], s_max=ec.s_max,
-            mode=ec.mode, per_slot=True)
+            mode=ec.mode, per_slot=True, paged=self.paged)
         self.specs, self.pctx = specs, pctx
         if params is None:
             params = pm.init_params(specs, seed=seed)
@@ -96,18 +111,23 @@ class ServingEngine:
         lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
             else pctx.data_axes[0]
         self._vec_sharding = NamedSharding(mesh, P(lead))
-        self._cpspecs = cache_pspecs(cfg, ec.mode, pctx.data_axes)
+        self._table_sharding = NamedSharding(mesh, P(lead, None))
+        self._cpspecs = paged_cache_pspecs(cfg)
 
         layout = block_layout(cfg, plan, block_pos_stride=ec.block_pos_stride,
-                              mode=ec.mode)
-        blocks_per_seq = -(-ec.s_max // ec.block_pos_stride)
-        n_blocks = ec.n_kv_blocks or ec.buckets[-1] * blocks_per_seq
+                              mode="paged")
         self.pool = BlockPool(n_blocks, ec.block_pos_stride, layout=layout)
         self.scheduler = Scheduler(self.pool, SchedulerConfig(ec.buckets))
 
         self.queue = CommandQueue(mesh)
         self._kernels: Dict[int, HybridKernel] = {}
-        self._cache = None
+        # ONE paged arena for the engine's whole lifetime, donated through
+        # every enqueue; pages are never zeroed (stale KV past a slot's
+        # position is causally masked in-kernel)
+        self._arena = jax.tree.map(
+            lambda sd, sp: jax.device_put(
+                jnp.zeros(sd.shape, sd.dtype), NamedSharding(self.mesh, sp)),
+            paged_cache_specs(cfg, plan, self.paged), self._cpspecs)
         self._bucket: Optional[int] = None
         self._rngs: Dict[str, np.random.Generator] = {}
         self.stats = EngineStats()
@@ -116,7 +136,17 @@ class ServingEngine:
 
     def submit(self, prompt: Sequence[int],
                sampling: Optional[SamplingParams] = None) -> Request:
-        req = Request(prompt, sampling)
+        return self._submit(Request(prompt, sampling))
+
+    def fork(self, parent: Request,
+             sampling: Optional[SamplingParams] = None) -> Request:
+        """Submit a fork of ``parent`` (same prompt, e.g. n>1 sampling).
+        Once the parent's prefill has published its full prompt pages, the
+        fork's block table adopts them — the prompt KV is physically shared
+        in the arena, not recomputed per sibling."""
+        return self._submit(parent.fork(sampling))
+
+    def _submit(self, req: Request) -> Request:
         ec = self.engine_cfg
         if len(req.prompt) + req.sampling.max_tokens > ec.s_max:
             raise ValueError(
@@ -134,6 +164,7 @@ class ServingEngine:
         return req
 
     def cancel(self, request_id: str) -> bool:
+        self._rngs.pop(request_id, None)
         return self.scheduler.cancel(request_id)
 
     # -- per-bucket executables --------------------------------------------
@@ -144,40 +175,13 @@ class ServingEngine:
             ec = self.engine_cfg
             body, in_specs, out_specs, _, _ = make_decode_body(
                 self.cfg, self.mesh, self.plan, batch=bucket, s_max=ec.s_max,
-                mode=ec.mode, per_slot=True)
+                mode=ec.mode, per_slot=True, paged=self.paged)
             kernel = HybridKernel(
                 lambda grid, *args: body(*args), grid=self.pctx.grid,
                 in_specs=in_specs, out_specs=out_specs,
                 name=f"serve_step_bs{bucket}", donate=(1,))
             self._kernels[bucket] = kernel
         return kernel
-
-    # -- KV arena management -----------------------------------------------
-
-    def _zero_cache(self, bucket: int):
-        ec = self.engine_cfg
-        cs = cache_specs(self.cfg, self.plan, bucket, ec.s_max, ec.mode)
-        return jax.tree.map(
-            lambda sd, sp: jax.device_put(
-                jnp.zeros(sd.shape, sd.dtype), NamedSharding(self.mesh, sp)),
-            cs, self._cpspecs)
-
-    def _prepare_cache(self, sd: ScheduledStep) -> None:
-        identity = all(m == -1 or m == s for s, m in enumerate(sd.slot_map))
-        if self._cache is not None and sd.bucket == self._bucket and identity:
-            return
-        if self._cache is None or all(m == -1 for m in sd.slot_map):
-            self._cache = self._zero_cache(sd.bucket)
-        else:
-            # gather surviving slots' KV rows into their new positions; fresh
-            # slots are wiped in-kernel by the reset flag
-            idx = jnp.asarray([max(m, 0) for m in sd.slot_map])
-            self._cache = jax.tree.map(
-                lambda c, sp: jax.device_put(
-                    jnp.take(c, idx, axis=2), NamedSharding(self.mesh, sp)),
-                self._cache, self._cpspecs)
-            self.stats.migrations += 1
-        self._bucket = sd.bucket
 
     # -- the drive loop ----------------------------------------------------
 
@@ -186,20 +190,24 @@ class ServingEngine:
         sd = self.scheduler.schedule()
         if sd is None:
             return False
-        self._prepare_cache(sd)
+        self._note_migration(sd)
         B = sd.bucket
         tokens = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
-        reset = np.asarray(sd.fresh, np.int32)
+        table = np.full((B, self._table_width), -1, np.int32)
         for s, r in enumerate(sd.slots):
             if r is not None:
                 tokens[s] = r.next_token
                 pos[s] = r.num_cached
+                table[s, :len(r.blocks.ids)] = r.blocks.ids
         dev = lambda a: jax.device_put(jnp.asarray(a), self._vec_sharding)
-        logits, self._cache = self.queue.enqueue(
-            self._kernel(B), self.params, self._cache,
-            dev(tokens), dev(pos), dev(reset))
+        logits, self._arena = self.queue.enqueue(
+            self._kernel(B), self.params, self._arena,
+            dev(tokens), dev(pos),
+            jax.device_put(jnp.asarray(table), self._table_sharding))
         self.stats.steps += 1
+        self.stats.peak_blocks_used = max(self.stats.peak_blocks_used,
+                                          self.pool.n_used)
         if sd.is_prefill:
             self.stats.prefill_launches += 1
         else:
@@ -210,6 +218,7 @@ class ServingEngine:
                 continue
             will_sample = r.samples_this_step
             r.num_cached += 1
+            self._publish_filled_page(r)
             if not will_sample:
                 continue
             tok = self._sample(r, rows[s])
@@ -220,8 +229,30 @@ class ServingEngine:
             reason = r.finish_reason_for(tok, self.engine_cfg.s_max)
             if reason is not None:
                 self.scheduler.complete(r, reason)
+                self._rngs.pop(r.request_id, None)
         self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
         return True
+
+    def _note_migration(self, sd: ScheduledStep) -> None:
+        """Bucket/slot churn is pure table bookkeeping now — the KV pages a
+        slot references are bucket-invariant, so nothing moves on device.
+        We still count the events the dense engine used to pay a
+        ``jnp.take`` arena copy for."""
+        identity = all(m == -1 or m == s for s, m in enumerate(sd.slot_map))
+        survived = any(m != -1 for m in sd.slot_map)
+        if survived and (sd.bucket != self._bucket or not identity):
+            self.stats.migrations += 1
+        self._bucket = sd.bucket
+
+    def _publish_filled_page(self, r: Request) -> None:
+        """After a step, publish the page the request just filled — if it is
+        full and covers prompt tokens only — so identical prompts (and
+        forks) can adopt it."""
+        stride = self.pool.block_pos_stride
+        nc = r.num_cached
+        if nc and nc % stride == 0 and nc <= len(r.prompt):
+            self.pool.publish_prefix(tuple(r.prompt[:nc]),
+                                     r.blocks.ids[nc // stride - 1])
 
     def _sample(self, req: Request, row: np.ndarray) -> int:
         t = req.sampling.temperature
@@ -263,3 +294,9 @@ class ServingEngine:
         t0 = min(e.first_enqueue_t for e in evs)
         t1 = max(e.last_done_t or e.last_enqueue_t for e in evs)
         return self.stats.tokens_generated / max(t1 - t0, 1e-9)
+
+    def peak_kv_bytes(self) -> int:
+        """Peak resident KV bytes (pool occupancy x per-page footprint)."""
+        layout = self.pool.layout
+        per = layout.bytes_per_block if layout is not None else 0
+        return self.stats.peak_blocks_used * per

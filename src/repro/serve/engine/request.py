@@ -99,6 +99,14 @@ class Request:
     def is_finished(self) -> bool:
         return self.state == RequestState.FINISHED
 
+    def fork(self, sampling: Optional[SamplingParams] = None) -> "Request":
+        """A fresh WAITING request over the same prompt (n>1 sampling from
+        one prompt).  The fork dedupes *device* memory, not just
+        accounting: at admission the scheduler adopts the parent's
+        published full prompt pages through the pool's prefix map, so both
+        sequences' block tables point at the same physical arena pages."""
+        return Request(self.prompt, sampling or self.sampling)
+
     # -- state machine -----------------------------------------------------
 
     def transition(self, new_state: str) -> None:

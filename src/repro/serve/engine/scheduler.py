@@ -8,6 +8,9 @@ Policy (vLLM-style, adapted to the one-executable-per-bucket constraint):
     compiles per-request — at most one step executable per bucket.
   * FIFO admission: a waiting request is admitted when a slot is free and
     the pool can back its whole current sequence plus one lookahead token.
+    Admission first adopts any published full-page prompt prefix from the
+    pool (physically shared pages; the covered positions are skipped, not
+    replayed), then allocates fresh pages for the remainder.
   * Before every step each running request's block table is grown to cover
     its next position; on pool exhaustion the *youngest* running request is
     preempted (blocks released, recompute on re-admission) until the oldest
@@ -63,7 +66,6 @@ class ScheduledStep:
     bucket: int
     slots: List[Optional[Request]]   # len == bucket; None = idle slot
     slot_map: List[int]              # new slot -> previous slot (-1 = none)
-    fresh: List[bool]                # slots whose cache must be reset
     admitted: List[Request]
     preempted: List[Request]
 
@@ -140,6 +142,30 @@ class Scheduler:
             return victim
         return None
 
+    def _peek_shared_prefix(self, request: Request) -> Tuple[int, int]:
+        """(adoptable pages, of which revivals off the free list) for the
+    longest published full-prompt-page run — a pure read, so a blocked
+    admission can be costed every schedule() without retain/release churn.
+    Capped strictly before the final prompt token — that token must still
+    be fed to produce the first logits."""
+        stride = self.pool.block_pos_stride
+        prompt = request.prompt
+        n = revive = 0
+        for t in range((len(prompt) - 1) // stride):
+            hit = self.pool.peek_prefix(tuple(prompt[:(t + 1) * stride]))
+            if hit is None:
+                break
+            n += 1
+            revive += int(hit)
+        return n, revive
+
+    def _shared_prefix_pages(self, request: Request, n: int) -> List[int]:
+        """Retain (or revive) the first ``n`` peeked prefix pages."""
+        stride = self.pool.block_pos_stride
+        prompt = request.prompt
+        return [self.pool.lookup_prefix(tuple(prompt[:(t + 1) * stride]))
+                for t in range(n)]
+
     # -- the policy --------------------------------------------------------
 
     def schedule(self) -> Optional[ScheduledStep]:
@@ -163,21 +189,32 @@ class Scheduler:
                             f"single sequence of {r.num_cached + 1} tokens")
                     preempted.append(victim)
 
-        # 2. FIFO admission into free capacity
+        # 2. FIFO admission into free capacity.  Published full-page prompt
+        #    prefixes are adopted first (shared physical pages, positions
+        #    skipped outright); only the remainder allocates fresh pages.
         admitted: List[Request] = []
         while self.waiting and len(self.running) < self.config.max_batch:
             head = self.waiting[0]
-            needed = self.pool.blocks_for(len(head.seq_tokens) + 1)
-            if not self.pool.can_alloc(needed):
+            n_shared, n_revive = self._peek_shared_prefix(head)
+            needed = max(
+                0, self.pool.blocks_for(len(head.seq_tokens) + 1) - n_shared)
+            # revived pages come off the free list too: cost them up front
+            if not self.pool.can_alloc(needed + n_revive):
                 if not self.running:
                     raise RuntimeError(
                         f"KV pool too small to admit {head.request_id} "
                         f"({needed} blocks needed, {self.pool.n_blocks} "
                         "total)")
                 break
+            shared = self._shared_prefix_pages(head, n_shared)
             self.waiting.popleft()
             head.blocks = SequenceBlocks(self.pool)
+            head.blocks.adopt(shared)
             head.blocks.ensure(len(head.seq_tokens) + 1)
+            if shared:
+                # the adopted pages' KV is already resident: prefill starts
+                # past them (their positions are never replayed)
+                head.num_cached = len(shared) * self.pool.block_pos_stride
             head.transition(RequestState.PREFILL)
             self.running.append(head)
             admitted.append(head)
@@ -202,17 +239,12 @@ class Scheduler:
             slots[r.slot] = r
 
         slot_map = [-1] * bucket
-        fresh = [True] * bucket              # idle slots stay wiped
         for s, r in enumerate(slots):
             if r is None:
                 continue
             prev = prev_slots.get(r.request_id)
-            if r.num_cached == 0 or prev is None:
-                fresh[s] = True              # new or recomputing: reset slot
-            else:
-                fresh[s] = False
+            if r.num_cached > 0 and prev is not None:
                 slot_map[s] = prev
         self._bucket = bucket
         return ScheduledStep(bucket=bucket, slots=slots, slot_map=slot_map,
-                             fresh=fresh, admitted=admitted,
-                             preempted=preempted)
+                             admitted=admitted, preempted=preempted)

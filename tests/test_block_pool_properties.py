@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for BlockPool invariants.
+
+The pool's ids are physical arena indices since the paged refactor, so its
+bookkeeping invariants ARE the device memory-safety argument:
+
+  * refcounts never go negative; every free block has refcount 0;
+  * free-list ∪ used = all blocks, with no duplicates;
+  * fork/release round-trips return every page;
+  * the prefix map never resolves to a free block (a hit on a freed page
+    revives it — refcount > 0 — before the id is handed out; a hit on a
+    recycled page is rejected by its generation counter).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.engine.block_cache import (BlockPool,  # noqa: E402
+                                            PoolExhausted, SequenceBlocks)
+
+S = settings(deadline=None, max_examples=60)
+
+
+def _check_invariants(pool: BlockPool):
+    free = set(pool._free)
+    assert len(free) == len(pool._free), "free list holds duplicates"
+    assert pool.n_free + pool.n_used == pool.n_blocks
+    for bid in range(pool.n_blocks):
+        assert pool._refs[bid] >= 0, f"negative refcount on {bid}"
+        assert (bid in free) == (pool._refs[bid] == 0), \
+            f"block {bid}: free-list membership disagrees with refcount"
+
+
+@S
+@given(st.data())
+def test_pool_invariants_under_random_op_sequences(data):
+    n = data.draw(st.integers(1, 8), label="n_blocks")
+    stride = data.draw(st.integers(1, 4), label="stride")
+    pool = BlockPool(n, stride)
+    held = []            # references we own (bid per reference)
+    published = []       # keys we have published at some point
+    for _ in range(data.draw(st.integers(0, 50), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["alloc", "release", "retain", "publish", "lookup"]), label="op")
+        if op == "alloc":
+            if pool.n_free:
+                held.append(pool.alloc())
+            else:
+                with pytest.raises(PoolExhausted):
+                    pool.alloc()
+        elif op == "release" and held:
+            bid = held.pop(data.draw(st.integers(0, len(held) - 1)))
+            pool.release(bid)
+        elif op == "retain" and held:
+            bid = held[data.draw(st.integers(0, len(held) - 1))]
+            held.append(pool.retain(bid))
+        elif op == "publish" and held:
+            bid = held[data.draw(st.integers(0, len(held) - 1))]
+            key = tuple(data.draw(st.lists(st.integers(0, 3), min_size=1,
+                                           max_size=3)))
+            pool.publish_prefix(key, bid)
+            published.append(key)
+        elif op == "lookup" and published:
+            key = published[data.draw(st.integers(0, len(published) - 1))]
+            peek = pool.peek_prefix(key)     # pure read, must agree
+            bid = pool.lookup_prefix(key)
+            assert (peek is None) == (bid is None)
+            if bid is not None:
+                # a prefix hit NEVER resolves to a free block: the returned
+                # id carries a reference we now own
+                assert pool.refcount(bid) > 0
+                assert bid not in pool._free
+                held.append(bid)
+        _check_invariants(pool)
+    # teardown: releasing every held reference returns every page
+    for bid in held:
+        pool.release(bid)
+    _check_invariants(pool)
+    assert pool.n_free == pool.n_blocks
+
+
+@S
+@given(n_blocks=st.integers(2, 12), stride=st.integers(1, 4),
+       tokens=st.integers(1, 24), forks=st.integers(1, 3))
+def test_fork_release_round_trips(n_blocks, stride, tokens, forks):
+    pool = BlockPool(n_blocks, stride)
+    need = pool.blocks_for(tokens)
+    if need > n_blocks:
+        return
+    seq = SequenceBlocks(pool)
+    seq.ensure(tokens)
+    children = [seq.fork() for _ in range(forks)]
+    assert pool.n_used == need          # forks share, never allocate
+    for child in children:
+        assert child.ids == seq.ids
+    seq.release_all()
+    assert pool.n_used == (need if forks else 0)
+    for child in children:
+        child.release_all()
+        _check_invariants(pool)
+    assert pool.n_free == pool.n_blocks
+
+
+@S
+@given(st.integers(1, 6))
+def test_prefix_never_resolves_after_recycling(n_blocks):
+    """Once a freed page is reallocated, every stale prefix entry for it
+    must miss (generation check), no matter the interleaving."""
+    pool = BlockPool(n_blocks, 2)
+    bid = pool.alloc()
+    pool.publish_prefix((1, 2), bid)
+    pool.release(bid)
+    # recycle the whole pool: bid is reallocated under a new generation
+    owned = [pool.alloc() for _ in range(n_blocks)]
+    assert bid in owned
+    assert pool.lookup_prefix((1, 2)) is None
+    for b in owned:
+        pool.release(b)
+    assert pool.n_free == pool.n_blocks

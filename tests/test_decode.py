@@ -11,7 +11,9 @@ from repro.models import params as pm
 from repro.models.config import ModelConfig
 from repro.models.ref import forward_ref, gather_params
 from repro.partition import DATA
-from repro.serve.decode import cache_pspecs, cache_specs, make_decode_step
+from repro.serve.decode import (PagedKV, cache_pspecs, cache_specs,
+                                make_decode_step, paged_cache_pspecs,
+                                paged_cache_specs)
 
 F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32,
            attn_block_kv=32)
@@ -65,6 +67,50 @@ def _run_decode(mesh, plan, cfg, mode, B, S_max, steps=8):
 def test_decode_matches_oracle(mesh32, plan32, cfg, mode, B):
     err = _run_decode(mesh32, plan32, cfg, mode, B=B, S_max=32)
     assert err < 2e-3, err
+
+
+@pytest.mark.parametrize("scramble", [False, True])
+def test_paged_decode_matches_dense_gemv(mesh16, plan16, scramble):
+    """The paged-arena gather/scatter attention path must reproduce the
+    dense gemv decode logits for ANY valid block table — including a
+    scrambled physical page assignment (pages are position-agnostic; the
+    table alone binds them to sequence positions)."""
+    cfg, B, S_max, stride, steps = DENSE, 4, 32, 8, 8
+    T = S_max // stride
+    step_d, specs, pctx = make_decode_step(cfg, mesh16, plan16, batch=B,
+                                           s_max=S_max, mode="gemv")
+    paged = PagedKV(n_blocks=B * T, block_pos_stride=stride)
+    step_p, _, _ = make_decode_step(cfg, mesh16, plan16, batch=B,
+                                    s_max=S_max, mode="gemv", paged=paged)
+    params = pm.init_params(specs, seed=0)
+    pspecs = pm.param_pspecs(specs)
+    params_d = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh16, s)),
+        params, pspecs)
+    cs = cache_specs(cfg, plan16, B, S_max, "gemv")
+    cps = cache_pspecs(cfg, "gemv", pctx.data_axes)
+    cache = jax.tree.map(
+        lambda sd, sp: jax.device_put(jnp.zeros(sd.shape, sd.dtype),
+                                      NamedSharding(mesh16, sp)), cs, cps)
+    arena = jax.tree.map(
+        lambda sd, sp: jax.device_put(jnp.zeros(sd.shape, sd.dtype),
+                                      NamedSharding(mesh16, sp)),
+        paged_cache_specs(cfg, plan16, paged), paged_cache_pspecs(cfg))
+    table = np.arange(B * T, dtype=np.int32)
+    if scramble:
+        np.random.default_rng(5).shuffle(table)
+    table_d = jax.device_put(jnp.asarray(table.reshape(B, T)),
+                             NamedSharding(mesh16, P(DATA, None)))
+    toks = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=(B, steps)).astype(np.int32)
+    for t in range(steps):
+        tok = jax.device_put(jnp.asarray(toks[:, t]),
+                             NamedSharding(mesh16, P(DATA)))
+        ld, cache = step_d(params_d, cache, tok, jnp.int32(t))
+        lp, arena = step_p(params_d, arena, tok, jnp.int32(t), table_d)
+        a, b = np.asarray(ld), np.asarray(lp)
+        rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+        assert rel < 1e-5, (t, rel)
 
 
 def test_whisper_decode_with_cross_cache(mesh16, plan16):

@@ -101,6 +101,18 @@ def test_mixed_length_workload_one_executable_per_bucket(mesh16, plan16):
     assert eng.stats.tokens_generated == sum(len(c.tokens) for c in outs)
     assert eng.throughput_tok_s() > 0.0
     assert eng.stats.prefill_launches > 0 and eng.stats.decode_launches > 0
+    # the paged arena is ONE bucket-invariant allocation: every leaf keeps
+    # the (G, n_pes, n_blocks_local, stride, kvh, hd) shape across the whole
+    # mixed-bucket run, and bucket churn was host-side table permutations
+    q = plan16.grid_q
+    n_loc = -(-eng.pool.n_blocks // q)
+    for entry in eng._arena:
+        for leaf in entry.values():
+            assert leaf.shape[2:4] == (n_loc, ec.block_pos_stride)
+    assert eng.stats.migrations > 0      # buckets shrank as requests finished
+    assert eng.stats.peak_blocks_used > 0
+    assert eng.peak_kv_bytes() == eng.stats.peak_blocks_used * \
+        eng.pool.layout.bytes_per_block
 
 
 def test_preemption_under_tiny_pool_still_completes(mesh16, plan16):
@@ -160,6 +172,70 @@ def test_eos_and_cancellation(mesh16, plan16):
         and r1.finish_reason == "cancelled"
     assert r2.finish_reason == "length" and len(r2.output_tokens) == 8
     assert eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_identical_prompts_share_physical_pages(mesh16, plan16):
+    """Two identical prompts must share prompt KV pages in the arena: the
+    second request's block table adopts the first one's published pages, so
+    peak pool occupancy stays strictly under 2x the solo footprint — and
+    the adopted (never recomputed) KV yields identical greedy tokens."""
+    stride, plen, n_tok = 4, 9, 4
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    prompt = np.random.default_rng(7).integers(
+        0, CFG.vocab_size, size=plen).tolist()
+    solo = eng.pool.blocks_for(plen + n_tok + 1)          # 4 pages
+
+    a = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    for _ in range(plen):          # prefill a fully: both full pages publish
+        eng.step()
+    b = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.drain()
+    assert a.output_tokens == b.output_tokens
+    shared = (plen - 1) // stride                         # 2 full pages
+    assert eng.stats.peak_blocks_used <= 2 * solo - shared < 2 * solo
+    assert eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_fork_shares_prompt_pages_and_matches_greedy(mesh16, plan16):
+    """Request.fork() for n>1 sampling from one prompt: the fork adopts the
+    parent's prompt pages (device memory dedupe) and, under greedy
+    sampling, reproduces the parent's tokens exactly."""
+    stride, plen, n_tok = 4, 9, 4
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    prompt = np.random.default_rng(8).integers(
+        0, CFG.vocab_size, size=plen).tolist()
+    parent = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    for _ in range(plen):
+        eng.step()
+    child = eng.fork(parent)
+    assert child.prompt == parent.prompt
+    assert child.request_id != parent.request_id
+    eng.drain()
+    assert child.output_tokens == parent.output_tokens
+    solo = eng.pool.blocks_for(plen + n_tok + 1)
+    assert eng.stats.peak_blocks_used <= 2 * solo - (plen - 1) // stride
+
+
+def test_rngs_are_dropped_on_finish_and_cancel(mesh16, plan16):
+    """Per-request sampling RNGs must not outlive their request (a leak
+    here grows host memory unboundedly in a long-running server)."""
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=4)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    rng = np.random.default_rng(9)
+    p1 = rng.integers(0, CFG.vocab_size, size=3).tolist()
+    p2 = rng.integers(0, CFG.vocab_size, size=3).tolist()
+    r1 = eng.submit(p1, SamplingParams(max_tokens=2, temperature=0.8, seed=1))
+    r2 = eng.submit(p2, SamplingParams(max_tokens=8, temperature=0.8, seed=2))
+    while not r1.is_finished:
+        eng.step()
+    assert r1.request_id not in eng._rngs     # dropped on natural completion
+    assert r2.request_id in eng._rngs         # still sampling
+    eng.cancel(r2.request_id)
+    assert r2.request_id not in eng._rngs     # dropped on cancellation
+    eng.drain()
+    assert eng._rngs == {}
 
 
 def test_submit_validation(mesh16, plan16):

@@ -68,15 +68,59 @@ def test_sequence_fork_shares_blocks_by_refcount():
     assert pool.n_free == 4
 
 
-def test_prefix_hooks_retain_and_invalidate():
+def test_prefix_hooks_retain_revive_and_invalidate():
     pool = BlockPool(2, 4)
     bid = pool.alloc()
     pool.publish_prefix((1, 2, 3, 4), bid)
     got = pool.lookup_prefix((1, 2, 3, 4))
     assert got == bid and pool.refcount(bid) == 2
     pool.release(bid)
-    pool.release(bid)                 # last ref: freed + prefix dropped
+    pool.release(bid)                 # last ref: back on the free list...
+    assert pool.n_free == 2
+    # ...but its KV is still resident, so a lookup REVIVES the page
+    assert pool.lookup_prefix((1, 2, 3, 4)) == bid
+    assert pool.refcount(bid) == 1 and pool.n_free == 1
+    pool.release(bid)
+    # recycle every page under new owners: the stale entry must not resolve
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1}
     assert pool.lookup_prefix((1, 2, 3, 4)) is None
+
+
+def test_freed_pages_are_recycled_last():
+    """Freed (prefix-cached) pages go to the bottom of the free stack so
+    never-used capacity is consumed before cached KV is clobbered."""
+    pool = BlockPool(3, 4)
+    a = pool.alloc()
+    pool.release(a)
+    assert pool.alloc() != a          # fresh pages first
+    assert pool.alloc() != a
+    assert pool.alloc() == a          # cached page recycled only when forced
+
+
+def test_admission_adopts_published_prefix_pages():
+    pool = BlockPool(8, 2)
+    s = Scheduler(pool, SchedulerConfig((1, 2)))
+    prompt = [5, 6, 7, 8, 9]
+    a = Request(prompt, SamplingParams(max_tokens=2))
+    s.submit(a)
+    s.schedule()
+    # emulate the engine publishing pages as prefill fills them
+    a.num_cached = 4
+    pool.publish_prefix(tuple(prompt[:2]), a.blocks.ids[0])
+    pool.publish_prefix(tuple(prompt[:4]), a.blocks.ids[1])
+
+    b = Request(prompt, SamplingParams(max_tokens=2))
+    s.submit(b)
+    s.schedule()
+    # b adopted both full prompt pages: same PHYSICAL ids, refcount 2,
+    # and its prefill starts past the covered positions
+    assert b.blocks.ids[:2] == a.blocks.ids[:2]
+    assert all(pool.refcount(bid) == 2 for bid in a.blocks.ids[:2])
+    assert b.num_cached == 4 and b.next_token == prompt[4]
+    # page math: the two requests share 2 pages, so total used < 2x solo
+    solo = pool.blocks_for(len(prompt) + 1)
+    assert pool.n_used == 2 * solo - 2
 
 
 # ---------------------------------------------------------------------------
@@ -143,8 +187,8 @@ def test_admission_buckets_to_smallest_cover():
     sd = s.schedule()
     assert sd.bucket == 4 and sum(r is not None for r in sd.slots) == 3
     assert all(r.state == RequestState.PREFILL for r in sd.admitted)
-    assert sd.is_prefill and all(sd.fresh[s_] for s_, r in
-                                 enumerate(sd.slots) if r is not None)
+    assert sd.is_prefill
+    assert all(m == -1 for m in sd.slot_map)   # no surviving slots yet
 
 
 def test_admission_is_fifo_and_respects_max_bucket():
@@ -173,7 +217,6 @@ def test_shrink_compacts_slots_and_reports_migration_map():
     # survivor at old slot 1 stays; old slot 3 compacts into slot 0
     assert sd2.slots[1] is reqs[1] and sd2.slot_map[1] == 1
     assert sd2.slots[0] is reqs[3] and sd2.slot_map[0] == 3
-    assert not sd2.fresh[0] and not sd2.fresh[1]
 
 
 def test_preemption_on_pool_exhaustion_evicts_youngest():

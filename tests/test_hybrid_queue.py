@@ -1,0 +1,53 @@
+"""CommandQueue / KernelEvent unit tests (cl_command_queue analogue)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.hybrid import CommandQueue, HybridKernel
+from repro.core.shmem import ShmemGrid
+from repro.partition import MODEL
+
+GRID = ShmemGrid(MODEL, 4, 4)
+
+
+def _add_kernel():
+    return HybridKernel(lambda grid, a, b: a + b, grid=GRID,
+                        in_specs=(P(MODEL), P(MODEL)), out_specs=P(MODEL),
+                        name="addk")
+
+
+def test_build_stamps_cost_stats_on_first_build_only(mesh16):
+    """Regression: a rebuild must keep cumulative build_time_s but must NOT
+    overwrite the per-launch cost stats recorded at first build."""
+    queue = CommandQueue(mesh16)
+    kern = _add_kernel()
+    a = jnp.ones((16, 8), jnp.float32)
+    b = jnp.full((16, 8), 2.0, jnp.float32)
+    queue.build(kern, a, b)
+    ev = queue.events["addk"]
+    t1 = ev.build_time_s
+    assert t1 > 0.0
+    # simulate stats a consumer is aggregating against, then rebuild
+    ev.flops, ev.bytes_accessed, ev.collective_bytes = 123.5, 7.0, 3.0
+    queue.build(kern, a, b)
+    assert (ev.flops, ev.bytes_accessed, ev.collective_bytes) == \
+        (123.5, 7.0, 3.0)
+    assert ev.build_time_s > t1          # build time stays cumulative
+
+
+def test_enqueue_finish_event_lifecycle(mesh16):
+    queue = CommandQueue(mesh16)
+    kern = _add_kernel()
+    a = jnp.ones((16, 8), jnp.float32)
+    b = jnp.full((16, 8), 2.0, jnp.float32)
+    out = queue.enqueue(kern, a, b)      # implicit first build
+    assert queue.depth == 1
+    queue.finish()
+    assert queue.depth == 0
+    np.testing.assert_allclose(np.asarray(out), 3.0)
+    ev = queue.events["addk"]
+    assert ev.launches == 1
+    assert 0.0 < ev.first_enqueue_t <= ev.last_enqueue_t <= ev.last_done_t
+    assert ev.active_span_s >= 0.0
