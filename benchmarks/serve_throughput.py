@@ -2,8 +2,15 @@
 
 Drives a mixed-length request workload through ``ServingEngine`` and reports
 tokens/sec derived from the CommandQueue's ``KernelEvent`` timestamps (the
-OpenCL-event view of the run), per-bucket launch/flop/collective stats, and
-paged-KV residency (peak block-pool occupancy + bytes resident).
+OpenCL-event view of the run), per-bucket launch/flop/collective stats,
+paged-KV residency (peak block-pool occupancy + bytes resident), and — since
+chunked prefill — time-to-first-token plus the prefill launches-vs-tokens
+split (one ``prefill_bs{N}_len{L}`` enqueue ingests up to L prompt tokens
+per slot, so launches < tokens ingested by construction).
+
+Full runs also write ``BENCH_serve.json`` at the repo root, seeding a
+machine-readable benchmark trajectory across PRs (smoke runs leave it
+alone unless ``--json`` is passed explicitly).
 
 Standalone:
   XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
@@ -11,12 +18,15 @@ Standalone:
 
 ``--steps N`` runs a smoke pass: the workload is submitted but only N engine
 steps execute (one bucket executable compiles, no warm-up) — CI uses this to
-keep the benchmark path from rotting without paying a full run.
+keep the benchmark path from rotting without paying a full run, and it
+asserts the chunked-prefill amortization invariant (strictly fewer prefill
+launches than prompt tokens ingested).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -36,6 +46,7 @@ from repro.serve.engine import (EngineConfig, EngineStats,  # noqa: E402
 
 N_REQUESTS = 16
 S_MAX = 64
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 
 def _workload(rng, vocab):
@@ -46,7 +57,11 @@ def _workload(rng, vocab):
     return prompts, sampling
 
 
-def run(report, steps=None):
+def run(report, steps=None, json_path="auto"):
+    # "auto": full runs seed the committed BENCH_serve.json trajectory;
+    # smoke (--steps) runs never clobber it unless --json asks explicitly
+    if json_path == "auto":
+        json_path = None if steps is not None else JSON_PATH
     cfg = ModelConfig(name="srv-bench", family="dense", d_model=128,
                       n_layers=4, n_heads=8, n_kv_heads=4, d_ff=512,
                       vocab_size=1024, param_dtype=jnp.float32,
@@ -55,10 +70,11 @@ def run(report, steps=None):
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
     plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
     ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8),
-                      block_pos_stride=8)
+                      block_pos_stride=8)     # default chunk ladder -> (16, 64)
     eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
 
     prompts, sampling = _workload(np.random.default_rng(0), cfg.vocab_size)
+    ttfts = []
     if steps is not None:
         # smoke pass: submit everything, run exactly `steps` step kernels
         for p, s in zip(prompts, sampling):
@@ -66,9 +82,19 @@ def run(report, steps=None):
         for _ in range(steps):
             if not eng.step():
                 break
+        # the whole point of chunked prefill: launches amortize over tokens.
+        # CI's bench-smoke job relies on this tripwire (an explicit raise,
+        # not an assert, so `python -O` cannot strip the gate).
+        if steps > 0 and eng.prefill_chunk_ladder and \
+                eng.stats.prefill_launches >= eng.stats.prompt_tokens_ingested:
+            raise RuntimeError(
+                "chunked prefill must use strictly fewer launches than "
+                f"prompt tokens ingested: {eng.stats.prefill_launches} "
+                f"launches for {eng.stats.prompt_tokens_ingested} tokens")
     else:
-        # warm EVERY bucket executable, then zero all counters so the timed
-        # pass reports steady-state work only
+        # warm EVERY bucket executable (the prefills warm the chunk kernels
+        # too), then zero all counters so the timed pass reports
+        # steady-state work only
         for b in ec.buckets:
             generate(eng, prompts[:b], SamplingParams(max_tokens=1))
         eng.stats = EngineStats()
@@ -80,19 +106,28 @@ def run(report, steps=None):
         outs = generate(eng, prompts, sampling)
         assert all(len(c.tokens) == s.max_tokens
                    for c, s in zip(outs, sampling))
+        ttfts = [c.ttft_s for c in outs if c.ttft_s is not None]
 
+    st = eng.stats
     tok_s = eng.throughput_tok_s()
     report("serve.engine.tokens_per_sec", f"{tok_s:.1f}",
-           f"{eng.stats.tokens_generated} tokens, "
-           f"{eng.stats.steps} launches")
+           f"{st.tokens_generated} tokens, {st.steps} launches")
     report("serve.engine.executables", eng.queue.n_executables,
-           "one per batch bucket used")
+           "one per (bucket, chunk-length) used")
     report("serve.engine.queue_max_depth", eng.queue.max_depth, "")
-    report("serve.engine.prefill_launches", eng.stats.prefill_launches, "")
-    report("serve.engine.decode_launches", eng.stats.decode_launches, "")
-    report("serve.engine.migrations", eng.stats.migrations,
+    report("serve.engine.prefill_launches", st.prefill_launches,
+           f"of which {st.prefill_chunk_launches} chunked "
+           f"(ladder {list(eng.prefill_chunk_ladder)})")
+    report("serve.engine.prompt_tokens_ingested", st.prompt_tokens_ingested,
+           "launches < tokens: chunked prefill amortizes enqueue overhead")
+    report("serve.engine.decode_launches", st.decode_launches, "")
+    if ttfts:
+        report("serve.engine.ttft_mean_ms", f"{np.mean(ttfts) * 1e3:.2f}",
+               f"over {len(ttfts)} requests")
+        report("serve.engine.ttft_max_ms", f"{np.max(ttfts) * 1e3:.2f}", "")
+    report("serve.engine.migrations", st.migrations,
            "host-side table permutations (no device KV copies)")
-    report("serve.engine.peak_kv_blocks_used", eng.stats.peak_blocks_used,
+    report("serve.engine.peak_kv_blocks_used", st.peak_blocks_used,
            f"of {eng.pool.n_blocks} pool blocks "
            f"(stride {eng.pool.block_pos_stride})")
     report("serve.engine.peak_kv_bytes_resident", eng.peak_kv_bytes(),
@@ -103,6 +138,30 @@ def run(report, steps=None):
                f"{ev.flops / 1e9:.3f}", "from XLA cost analysis")
         report(f"serve.event.{name}.collective_mb_per_launch",
                f"{ev.collective_bytes / 1e6:.3f}", "from HLO")
+
+    if json_path:
+        payload = {
+            "bench": "serve_throughput",
+            "mode": "smoke" if steps is not None else "full",
+            "tokens_per_sec": round(tok_s, 2),
+            "tokens_generated": st.tokens_generated,
+            "steps": st.steps,
+            "prefill_launches": st.prefill_launches,
+            "prefill_chunk_launches": st.prefill_chunk_launches,
+            "prompt_tokens_ingested": st.prompt_tokens_ingested,
+            "decode_launches": st.decode_launches,
+            "ttft_s_mean": round(float(np.mean(ttfts)), 4) if ttfts else None,
+            "ttft_s_max": round(float(np.max(ttfts)), 4) if ttfts else None,
+            "prefill_chunk_ladder": list(eng.prefill_chunk_ladder),
+            "executables": sorted(eng.kernel_events()),
+            "peak_kv_blocks_used": st.peak_blocks_used,
+            "peak_kv_bytes_resident": eng.peak_kv_bytes(),
+            "migrations": st.migrations,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        report("serve.engine.json", os.path.relpath(json_path), "written")
     return tok_s
 
 
@@ -110,13 +169,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=None,
                     help="smoke mode: run only N engine steps")
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path "
+                         "(default: BENCH_serve.json on full runs only; "
+                         "smoke runs don't clobber the trajectory)")
     args = ap.parse_args()
     print("name,value,derived")
 
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
-    run(report, steps=args.steps)
+    run(report, steps=args.steps, json_path=args.json or "auto")
 
 
 if __name__ == "__main__":

@@ -87,3 +87,14 @@ print(f"engine: {eng.stats.tokens_generated} tokens, "
       f"{eng.queue.n_executables} executables "
       f"(buckets {sorted(eng.kernel_events())}), "
       f"{eng.throughput_tok_s():.1f} tok/s from KernelEvent stats")
+print(f"engine: chunked prefill ingested "
+      f"{eng.stats.prompt_tokens_ingested} prompt tokens in "
+      f"{eng.stats.prefill_launches} launches "
+      f"({eng.stats.prefill_chunk_launches} chunked)")
+
+# streaming front-end: tokens arrive as they are sampled
+stream_prompt = prompts[0]
+print("engine stream:", end=" ", flush=True)
+for tok in eng.stream(stream_prompt, SamplingParams(max_tokens=6)):
+    print(tok, end=" ", flush=True)
+print()

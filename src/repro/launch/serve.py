@@ -41,6 +41,9 @@ def main():
                          "continuous-batching engine")
     ap.add_argument("--requests", type=int, default=8,
                     help="workload size for --engine")
+    ap.add_argument("--prefill-chunks", default="16,64,256",
+                    help="chunked-prefill length ladder for --engine "
+                         "(comma-separated; empty string disables chunking)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -101,9 +104,11 @@ def _main_engine(cfg, mesh, plan, args):
     stride = 16
     s_max = -(-max(args.s_max, args.tokens + 12) // stride) * stride
     buckets = tuple(b for b in (1, 2, 4, 8) if b <= max(args.batch, 1))
+    chunks = tuple(int(c) for c in args.prefill_chunks.split(",") if c)
     eng = build_engine(cfg, mesh, plan, seed=0,
                        engine_cfg=EngineConfig(s_max=s_max, buckets=buckets,
-                                               block_pos_stride=stride))
+                                               block_pos_stride=stride,
+                                               prefill_chunks=chunks))
     rng = np.random.default_rng(0)
     vocab = min(cfg.vocab_size, 256)
     prompts = [rng.integers(0, vocab,
@@ -114,11 +119,18 @@ def _main_engine(cfg, mesh, plan, args):
         print(f"  {c.request_id}: prompt[{len(c.prompt)}] -> "
               f"{c.tokens[:12]} ({c.finish_reason})")
     ev = eng.kernel_events()
-    print(f"served {len(outs)} requests / {eng.stats.tokens_generated} "
-          f"tokens: {eng.throughput_tok_s():.1f} tok/s, "
-          f"{eng.stats.prefill_launches}+{eng.stats.decode_launches} "
-          f"prefill+decode launches over {len(ev)} bucket executables "
+    st = eng.stats
+    ttfts = [c.ttft_s for c in outs if c.ttft_s is not None]
+    print(f"served {len(outs)} requests / {st.tokens_generated} tokens: "
+          f"{eng.throughput_tok_s():.1f} tok/s over {len(ev)} executables "
           f"{sorted(ev)}")
+    # launches != tokens since chunked prefill: one prefill_bs{N}_len{L}
+    # enqueue ingests up to L prompt tokens per slot
+    ttft_ms = f"{np.mean(ttfts) * 1e3:.1f} ms" if ttfts else "n/a"
+    print(f"  prefill: {st.prompt_tokens_ingested} prompt tokens ingested "
+          f"in {st.prefill_launches} launches "
+          f"({st.prefill_chunk_launches} chunked); "
+          f"decode: {st.decode_launches} launches; mean TTFT {ttft_ms}")
 
 
 if __name__ == "__main__":

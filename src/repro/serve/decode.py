@@ -312,6 +312,34 @@ def _attn_decode_longctx(pctx, p, x, cfg, kc, vc, pos, shard_offset,
     return y, kc, vc
 
 
+def _paged_gather(kc, vc, table, stride, row, qrows):
+    """Gather this grid row's pages of every slot from the local arena shard.
+
+    Returns (kg, vg, kv_pos): (B, T*stride, kvh, hd) per-slot KV runs plus
+    their global position labels — entries this row does not own (or
+    unallocated table slots, id -1) get positions past any query so the
+    causal mask removes them.  Shared verbatim by the one-position decode
+    path and the chunked-prefill path: the routing math (owner row
+    ``pid % q``, local index ``pid // q``, 2**30 sentinel) must stay
+    bit-identical between them."""
+    B, T = table.shape
+    hkv_loc, hd = kc.shape[-2:]
+    own = (table >= 0) & (table % qrows == row)              # (B, T)
+    lg = jnp.where(own, table // qrows, 0).reshape(-1)
+    kg = jnp.take(kc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
+    vg = jnp.take(vc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
+    pos_grid = jnp.arange(T)[:, None] * stride + jnp.arange(stride)[None, :]
+    kv_pos = jnp.where(own[:, :, None], pos_grid[None],
+                       jnp.int32(2 ** 30)).reshape(B, T * stride)
+    return kg, vg, kv_pos
+
+
+def _rows_pmax(grid):
+    """pmax over grid rows (the axis paged KV pages shard on)."""
+    groups = [[i * grid.r + j for i in range(grid.q)] for j in range(grid.r)]
+    return lambda t: lax.pmax(t, grid.axis, axis_index_groups=groups)
+
+
 def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride):
     """Paged-arena decode attention (gemv projections, weights stationary).
 
@@ -352,28 +380,71 @@ def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride):
     kc = kc.at[li_w, off_w].set(k[:, 0].astype(kc.dtype), mode="drop")
     vc = vc.at[li_w, off_w].set(v[:, 0].astype(vc.dtype), mode="drop")
 
-    # gather this row's pages of every slot; entries this row does not own
-    # get positions past any query so the causal mask removes them
-    T = table.shape[1]
-    own = (table >= 0) & (table % qrows == i)               # (B, T)
-    lg = jnp.where(own, table // qrows, 0).reshape(-1)
-    kg = jnp.take(kc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
-    vg = jnp.take(vc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
-    pos_grid = jnp.arange(T)[:, None] * stride + jnp.arange(stride)[None, :]
-    kv_pos = jnp.where(own[:, :, None], pos_grid[None],
-                       jnp.int32(2 ** 30)).reshape(B, T * stride)
+    kg, vg, kv_pos = _paged_gather(kc, vc, table, stride, i, qrows)
     q_pos = jnp.reshape(pos, (1,)) if jnp.ndim(pos) == 0 else pos[:, None]
     part = attention_partial(
         q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
         vg.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=q_pos)
-
-    def reduce_max(t):
-        groups = [[ii * grid.r + jj for ii in range(grid.q)]
-                  for jj in range(grid.r)]
-        return lax.pmax(t, grid.axis, axis_index_groups=groups)
-
-    out = combine_partials(part, reduce_max, grid.psum_rows)
+    out = combine_partials(part, _rows_pmax(grid), grid.psum_rows)
     out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
+    y = dense(pctx, out.astype(x.dtype), p["wo"])
+    return y, kc, vc
+
+
+def _attn_prefill_chunk_paged(pctx, p, x, cfg, kc, vc, pos, n_valid, table,
+                              stride):
+    """Chunked-prefill attention against the paged arena (gemv projections).
+
+    x (B, L, D_loc) replicated over rows: each slot advances up to L
+    positions in ONE launch.  Slot b's chunk covers global positions
+    [pos[b], pos[b] + n_valid[b]); chunk columns past ``n_valid`` are
+    padding — their K/V writes are dropped and their outputs never read
+    (the body extracts the last valid position only), so one compiled
+    ``prefill_bs{N}_len{L}`` executable serves every partial chunk.  All
+    valid positions' K/V scatter into the slot's block-table pages in one
+    shot; the gather + blocked causal mask (q_pos (B, L) against per-slot
+    kv_pos labels) makes chunk position j attend to exactly [0, pos+j], so
+    the chunk reproduces the per-token path position for position."""
+    B, L = x.shape[:2]
+    grid = pctx.grid
+    i, _ = grid.my_coords()
+    qrows = pctx.q
+    hq_loc = cfg.n_heads_padded // pctx.r
+    hkv_loc = cfg.n_kv_stored // pctx.r
+    hd = cfg.head_dim
+    biases = [p.get("bq"), p.get("bk"), p.get("bv")] if cfg.qkv_bias else None
+    q, k, v = fused_dense(pctx, x, [p["wq"], p["wk"], p["wv"]], biases=biases)
+    q = q.reshape(B, L, hq_loc, hd)
+    k = k.reshape(B, L, hkv_loc, hd)
+    v = v.reshape(B, L, hkv_loc, hd)
+    if cfg.qk_norm:
+        q = rms_norm_local(q, p["q_norm"])
+        k = rms_norm_local(k, p["k_norm"])
+    pos2 = pos[:, None] + jnp.arange(L)[None, :]            # (B, L) global
+    cos, sin = rope_tables(pos2, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]       # (B, L)
+    n_loc = kc.shape[0]
+    T = table.shape[1]
+    # scatter every valid chunk position's K/V into its table page (owner
+    # row only; padding columns, idle slots and out-of-owner writes are
+    # routed out of bounds and dropped)
+    tidx = jnp.clip(pos2 // stride, 0, T - 1)
+    pid_w = jnp.take_along_axis(table, tidx, axis=1)        # (B, L)
+    mine_w = valid & (pid_w >= 0) & (pid_w % qrows == i)
+    li_w = jnp.where(mine_w, pid_w // qrows, n_loc)
+    off_w = pos2 % stride
+    kc = kc.at[li_w, off_w].set(k.astype(kc.dtype), mode="drop")
+    vc = vc.at[li_w, off_w].set(v.astype(vc.dtype), mode="drop")
+
+    kg, vg, kv_pos = _paged_gather(kc, vc, table, stride, i, qrows)
+    part = attention_partial(
+        q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
+        vg.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=pos2)
+    out = combine_partials(part, _rows_pmax(grid), grid.psum_rows)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, hq_loc * hd)
     y = dense(pctx, out.astype(x.dtype), p["wo"])
     return y, kc, vc
 
@@ -400,11 +471,16 @@ def _cross_decode(pctx, p, x, cfg, ck, cv):
 
 
 def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
-                  table=None, paged=None):
+                  table=None, paged=None, n_valid=None):
     ast = attn_static(cfg, pctx.r) if mixer == "attn" else None
     if mixer == "attn":
         h = _norm(pctx, cfg, p["norm1"], x)
-        if paged is not None:
+        if paged is not None and n_valid is not None:
+            h, kc, vc = _attn_prefill_chunk_paged(pctx, p["mixer"], h, ast,
+                                                  cache["k"], cache["v"],
+                                                  pos, n_valid, table,
+                                                  paged.block_pos_stride)
+        elif paged is not None:
             h, kc, vc = _attn_decode_paged(pctx, p["mixer"], h, ast,
                                            cache["k"], cache["v"], pos,
                                            table, paged.block_pos_stride)
@@ -442,7 +518,8 @@ def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
 
 def _embed_decode(pctx, embed_blk, tokens, mode, compute_dtype):
     """tokens: batched -> (B_data,) replicated over model (each row takes its
-    slice); longctx -> (B,) replicated everywhere."""
+    slice); longctx -> (B,) replicated everywhere; chunked prefill feeds
+    (B, L) token blocks (gemv layout only) and gets (B, L, D_loc) back."""
     vb = embed_blk[0]
     V_loc = vb.shape[0]
     grid = pctx.grid
@@ -454,7 +531,8 @@ def _embed_decode(pctx, embed_blk, tokens, mode, compute_dtype):
     if mode == "batched":
         # sum over vocab row-blocks AND scatter the batch dim to rows
         return grid.reduce_scatter_rows(part, axis=0)[:, None, :]
-    return grid.psum_rows(part)[:, None, :]     # gemv/longctx: repl. rows
+    out = grid.psum_rows(part)                  # gemv/longctx: repl. rows
+    return out if tokens.ndim == 2 else out[:, None, :]
 
 
 def _last_logits(pctx, lm_head_blk, x, gather_rows: bool):
@@ -620,6 +698,80 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
     return jax.jit(mapped, donate_argnums=(1,)), specs, pctx
+
+
+def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
+                            batch: int, s_max: int, chunk: int,
+                            paged: PagedKV):
+    """Chunked multi-token prefill body: up to L tokens per slot per launch.
+
+    The ``prefill_bs{N}_len{L}`` ABI (gemv layout, paged arena only):
+
+        body(params, arena, tokens (B, L), pos (B,), n_valid (B,),
+             table (B, T)) -> (logits (B, 1, V), arena)
+
+    Slot b consumes ``tokens[b, :n_valid[b]]`` at cache positions
+    ``[pos[b], pos[b] + n_valid[b])``: the whole chunk embeds as one (B, L)
+    block, every layer scatters all valid positions' K/V into the slot's
+    block-table pages inside the SAME kernel, and blocked causal attention
+    over the gathered pages reproduces the token-stepped prefill position
+    for position.  The returned logits belong to chunk position
+    ``n_valid - 1`` — exactly the sampling logits when the chunk contains
+    the slot's final known token (``n_valid`` may be 1, so a mixed batch
+    can carry decode-phase slots through the same launch).  Prompt
+    ingestion drops from O(prompt) to O(prompt / L) enqueues — the paper's
+    amortize-the-offload rule applied to time-to-first-token.
+    """
+    if not 1 <= chunk <= s_max:
+        raise ValueError(f"chunk must be in [1, s_max={s_max}], got {chunk}")
+    if s_max % paged.block_pos_stride:
+        raise ValueError(
+            f"s_max={s_max} must be a multiple of "
+            f"block_pos_stride={paged.block_pos_stride}")
+    pctx = make_pctx(plan, "allgather", remat=False,
+                     compute_dtype=cfg.compute_dtype)
+    pctx = dataclasses.replace(pctx, act_layout="repl_rows", preskewed=False)
+    specs = param_specs(cfg, plan.grid_q, plan.grid_r, preskew=False)
+    pattern = cfg.pattern()
+
+    def body(params, cache, tokens, pos, n_valid, table):
+        x = _embed_decode(pctx, params["embed"], tokens, "gemv",
+                          cfg.compute_dtype)
+
+        def group_body(carry, xs):
+            x = carry
+            group_params, group_cache = xs
+            new_caches = []
+            for posn, (mixer, ffn) in enumerate(pattern):
+                x, nc = _decode_layer(pctx, cfg, mixer, ffn,
+                                      group_params[posn], x,
+                                      group_cache[posn], pos, 0, "gemv",
+                                      table=table, paged=paged,
+                                      n_valid=n_valid)
+                new_caches.append(nc)
+            return x, new_caches
+
+        local_cache = jax.tree.map(lambda c: c[:, 0], cache)
+        x, new_cache = lax.scan(group_body, x,
+                                (params["layers"], local_cache))
+        # extract each slot's last VALID chunk position before the final
+        # norm + lm_head (both are pointwise over positions, so the gather
+        # commutes and the vocab projection runs on 1 position, not L)
+        idx = jnp.clip(n_valid - 1, 0, x.shape[1] - 1)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        x = _norm(pctx, cfg, params["final_norm"], x)
+        logits = _last_logits(pctx, params["lm_head"], x, gather_rows=False)
+        new_cache = jax.tree.map(lambda c: c[:, None], new_cache)
+        return logits, new_cache
+
+    pspecs = pm.param_pspecs(specs)
+    cpspecs = paged_cache_pspecs(cfg)
+    lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
+        else pctx.data_axes[0]
+    in_specs = (pspecs, cpspecs, P(lead, None), P(lead), P(lead),
+                P(lead, None))
+    out_specs = (P(lead, None, None), cpspecs)
+    return body, in_specs, out_specs, specs, pctx
 
 
 def make_prefill(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,

@@ -1,10 +1,11 @@
 """Synchronous facade: ``generate(prompts, sampling) -> completions``.
 
 The smallest useful surface over :class:`ServingEngine` — submit a batch of
-prompts, drain the engine, and return per-request completions.  Used by
-``examples/serve_decode.py``, ``repro.launch.serve --engine`` and the
-throughput benchmark; an async server would replace ``drain()`` with a
-stream of ``engine.step()`` calls.
+prompts, drain the engine, and return per-request completions (now carrying
+per-request TTFT).  Used by ``examples/serve_decode.py``,
+``repro.launch.serve --engine`` and the throughput benchmark; for
+incremental consumption use the generator facade ``engine.stream(prompt)``,
+which yields tokens as they are sampled.
 """
 
 from __future__ import annotations
@@ -23,6 +24,7 @@ class Completion:
     tokens: List[int]              # generated tokens (incl. EOS when hit)
     finish_reason: str             # "stop" | "length" | "cancelled"
     n_preemptions: int
+    ttft_s: Optional[float] = None  # submit-to-first-token (None if no token)
 
 
 def build_engine(cfg, mesh, plan, *, engine_cfg: Optional[EngineConfig] = None,
@@ -53,5 +55,5 @@ def generate(engine: ServingEngine, prompts: Sequence[Sequence[int]],
     return [Completion(request_id=r.request_id, prompt=list(r.prompt),
                        tokens=list(r.output_tokens),
                        finish_reason=r.finish_reason or "length",
-                       n_preemptions=r.n_preemptions)
+                       n_preemptions=r.n_preemptions, ttft_s=r.ttft_s)
             for r in requests]

@@ -16,18 +16,24 @@ re-zeroing and slot migration is a host-side permutation of the table rows
 (zero device-side KV traffic).  Pool occupancy, not bucket width, bounds
 resident sequences.
 
-Prefill is token-stepped through the same executable (slots still consuming
-prompt tokens simply don't sample), so a bucket never needs a second
-compiled program and mixed prefill/decode batches are the norm, not a
-special case.  As prefill fills a full prompt page the engine publishes it
-to the pool's prefix map, so identical prompts — including ``fork()``
-siblings — adopt the same physical pages at admission.
+Prompt ingestion is CHUNKED: while any slot still has more than one known
+token to feed, the engine launches a ``prefill_bs{N}_len{L}`` executable
+(L from the ``prefill_chunks`` ladder, capped by ``s_max``) that consumes up
+to L tokens per slot in one enqueue — cutting prompt replay from O(prompt)
+to O(prompt / L) launches, the dominant term in time-to-first-token.
+Decode-phase slots ride through the same launch with ``n_valid = 1``, so
+mixed prefill/decode batches remain the norm; pure-decode batches use the
+cheap one-position ``serve_step_bs{N}`` executable.  As prefill fills full
+prompt pages the engine publishes them (several per chunk, possibly) to the
+pool's prefix map, so identical prompts — including ``fork()`` siblings —
+adopt the same physical pages at admission and resume mid-chunk.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+import time
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,7 +43,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hybrid import CommandQueue, HybridKernel
 from repro.models import params as pm
-from repro.serve.decode import (PagedKV, make_decode_body, paged_cache_pspecs,
+from repro.serve.decode import (PagedKV, make_decode_body,
+                                make_prefill_chunk_body, paged_cache_pspecs,
                                 paged_cache_specs)
 from repro.serve.engine.block_cache import BlockPool, block_layout
 from repro.serve.engine.request import Request, RequestState, SamplingParams
@@ -53,13 +60,19 @@ class EngineConfig:
     n_kv_blocks: Optional[int] = None     # pool size; None = fit max batch
     mode: str = "gemv"                    # per-slot capable decode layout
     max_steps: Optional[int] = None       # drain() safety valve
+    # chunked-prefill length ladder: entries above s_max are dropped, ()
+    # disables chunking (token-stepped prefill, the pre-chunking behavior)
+    prefill_chunks: Tuple[int, ...] = (16, 64, 256)
 
 
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0
-    prefill_launches: int = 0
+    prefill_launches: int = 0             # launches with a prefilling slot
+    prefill_chunk_launches: int = 0       # of which used a prefill_bs{N}_len{L}
     decode_launches: int = 0
+    prompt_tokens_ingested: int = 0       # prompt-position tokens fed (a
+    #                                       preemption replay re-feeds them)
     tokens_generated: int = 0
     migrations: int = 0                   # host-side table permutations only
     peak_blocks_used: int = 0             # pool occupancy high-water mark
@@ -93,6 +106,10 @@ class ServingEngine:
         self.paged = PagedKV(n_blocks=n_blocks,
                              block_pos_stride=ec.block_pos_stride)
         self._table_width = blocks_per_seq
+        # chunk ladder, ascending, capped by s_max (an L=1 chunk would just
+        # be a slower decode step, so it is dropped too)
+        self._chunks = tuple(sorted({int(c) for c in ec.prefill_chunks
+                                     if 2 <= c <= ec.s_max}))
 
         # shared lowering metadata: body/specs are batch-polymorphic, only
         # the compiled executables are per-bucket
@@ -120,7 +137,9 @@ class ServingEngine:
         self.scheduler = Scheduler(self.pool, SchedulerConfig(ec.buckets))
 
         self.queue = CommandQueue(mesh)
-        self._kernels: Dict[int, HybridKernel] = {}
+        # executable cache keyed by (bucket, L): L=0 is the one-position
+        # decode step, L>0 a chunked-prefill executable from the ladder
+        self._kernels: Dict[Tuple[int, int], HybridKernel] = {}
         # ONE paged arena for the engine's whole lifetime, donated through
         # every enqueue; pages are never zeroed (stale KV past a slot's
         # position is causally masked in-kernel)
@@ -147,6 +166,7 @@ class ServingEngine:
         return self._submit(parent.fork(sampling))
 
     def _submit(self, req: Request) -> Request:
+        req.submit_t = time.perf_counter()      # TTFT clock starts here
         ec = self.engine_cfg
         if len(req.prompt) + req.sampling.max_tokens > ec.s_max:
             raise ValueError(
@@ -170,7 +190,7 @@ class ServingEngine:
     # -- per-bucket executables --------------------------------------------
 
     def _kernel(self, bucket: int) -> HybridKernel:
-        kernel = self._kernels.get(bucket)
+        kernel = self._kernels.get((bucket, 0))
         if kernel is None:
             ec = self.engine_cfg
             body, in_specs, out_specs, _, _ = make_decode_body(
@@ -180,31 +200,86 @@ class ServingEngine:
                 lambda grid, *args: body(*args), grid=self.pctx.grid,
                 in_specs=in_specs, out_specs=out_specs,
                 name=f"serve_step_bs{bucket}", donate=(1,))
-            self._kernels[bucket] = kernel
+            self._kernels[(bucket, 0)] = kernel
+        return kernel
+
+    def _chunk_kernel(self, bucket: int, chunk: int) -> HybridKernel:
+        kernel = self._kernels.get((bucket, chunk))
+        if kernel is None:
+            ec = self.engine_cfg
+            body, in_specs, out_specs, _, _ = make_prefill_chunk_body(
+                self.cfg, self.mesh, self.plan, batch=bucket, s_max=ec.s_max,
+                chunk=chunk, paged=self.paged)
+            kernel = HybridKernel(
+                lambda grid, *args: body(*args), grid=self.pctx.grid,
+                in_specs=in_specs, out_specs=out_specs,
+                name=f"prefill_bs{bucket}_len{chunk}", donate=(1,))
+            self._kernels[(bucket, chunk)] = kernel
         return kernel
 
     # -- the drive loop ----------------------------------------------------
 
+    def _chunk_len(self, max_remaining: int) -> Optional[int]:
+        """Pick this launch's prefill chunk length: the largest ladder entry
+        the biggest backlog fills, else the smallest entry (covering the
+        tail with ``n_valid`` padding — so a prompt of P tokens always
+        ingests in <= ceil(P / min_chunk) launches, never P).  None means
+        no slot is mid-prefill (or chunking is disabled): use the
+        one-position decode step."""
+        if max_remaining <= 1 or not self._chunks:
+            return None
+        for c in reversed(self._chunks):
+            if c <= max_remaining:
+                return c
+        return self._chunks[0]
+
     def step(self) -> bool:
-        """Schedule + enqueue one step kernel; returns False when idle."""
+        """Schedule + enqueue one step kernel; returns False when idle.
+
+        A step is ONE enqueue either way: a ``serve_step_bs{N}`` advancing
+        every slot by one position, or — whenever some slot still has a
+        prompt backlog — a ``prefill_bs{N}_len{L}`` advancing slot s by
+        ``min(remaining[s], L)`` positions (decode slots ride along with
+        one valid position)."""
         sd = self.scheduler.schedule()
         if sd is None:
             return False
         self._note_migration(sd)
         B = sd.bucket
-        tokens = np.zeros((B,), np.int32)
+        chunk = self._chunk_len(sd.max_remaining)
         pos = np.zeros((B,), np.int32)
         table = np.full((B, self._table_width), -1, np.int32)
-        for s, r in enumerate(sd.slots):
-            if r is not None:
-                tokens[s] = r.next_token
-                pos[s] = r.num_cached
-                table[s, :len(r.blocks.ids)] = r.blocks.ids
+        fed = [0] * B
         dev = lambda a: jax.device_put(jnp.asarray(a), self._vec_sharding)
-        logits, self._arena = self.queue.enqueue(
-            self._kernel(B), self.params, self._arena,
-            dev(tokens), dev(pos),
-            jax.device_put(jnp.asarray(table), self._table_sharding))
+        dev2 = lambda a: jax.device_put(jnp.asarray(a), self._table_sharding)
+        if chunk is None:
+            tokens = np.zeros((B,), np.int32)
+            for s, r in enumerate(sd.slots):
+                if r is not None:
+                    tokens[s] = r.next_token
+                    pos[s] = r.num_cached
+                    table[s, :len(r.blocks.ids)] = r.blocks.ids
+                    fed[s] = 1
+            logits, self._arena = self.queue.enqueue(
+                self._kernel(B), self.params, self._arena,
+                dev(tokens), dev(pos), dev2(table))
+        else:
+            tokens = np.zeros((B, chunk), np.int32)
+            n_valid = np.zeros((B,), np.int32)
+            for s, r in enumerate(sd.slots):
+                if r is None:
+                    continue
+                n = min(sd.remaining[s], chunk)
+                seq = r.seq_tokens
+                tokens[s, :n] = seq[r.num_cached:r.num_cached + n]
+                pos[s] = r.num_cached
+                n_valid[s] = n
+                table[s, :len(r.blocks.ids)] = r.blocks.ids
+                fed[s] = n
+            logits, self._arena = self.queue.enqueue(
+                self._chunk_kernel(B, chunk), self.params, self._arena,
+                dev2(tokens), dev(pos), dev(n_valid), dev2(table))
+            self.stats.prefill_chunk_launches += 1
         self.stats.steps += 1
         self.stats.peak_blocks_used = max(self.stats.peak_blocks_used,
                                           self.pool.n_used)
@@ -216,13 +291,25 @@ class ServingEngine:
         for s, r in enumerate(sd.slots):
             if r is None:
                 continue
-            will_sample = r.samples_this_step
-            r.num_cached += 1
-            self._publish_filled_page(r)
+            n = fed[s]
+            # the launch fed seq_tokens[num_cached : num_cached + n]; its
+            # logits extend the sequence iff that range ends at the last
+            # known token (the per-token samples_this_step rule, chunked)
+            will_sample = r.num_cached + n == len(r.seq_tokens)
+            # count only the fed positions inside the prompt: replayed
+            # OUTPUT tokens (recompute preemption) are not prompt ingestion,
+            # while re-fed prompt positions are — the kernel really re-ran
+            prev_cached = r.num_cached
+            self.stats.prompt_tokens_ingested += max(
+                0, min(prev_cached + n, len(r.prompt)) - prev_cached)
+            r.num_cached += n
+            self._publish_filled_pages(r, prev_cached, r.num_cached)
             if not will_sample:
                 continue
             tok = self._sample(r, rows[s])
             r.output_tokens.append(tok)
+            if len(r.output_tokens) == 1:
+                r.first_token_t = time.perf_counter()
             self.stats.tokens_generated += 1
             if r.state == RequestState.PREFILL:
                 r.transition(RequestState.DECODE)
@@ -244,15 +331,17 @@ class ServingEngine:
             self.stats.migrations += 1
         self._bucket = sd.bucket
 
-    def _publish_filled_page(self, r: Request) -> None:
-        """After a step, publish the page the request just filled — if it is
-        full and covers prompt tokens only — so identical prompts (and
-        forks) can adopt it."""
+    def _publish_filled_pages(self, r: Request, old_nc: int,
+                              new_nc: int) -> None:
+        """Publish every page the launch completed in (old_nc, new_nc] that
+        covers prompt tokens only, so identical prompts (and forks) can
+        adopt it — one chunked launch may fill several pages at once."""
         stride = self.pool.block_pos_stride
-        nc = r.num_cached
-        if nc and nc % stride == 0 and nc <= len(r.prompt):
-            self.pool.publish_prefix(tuple(r.prompt[:nc]),
-                                     r.blocks.ids[nc // stride - 1])
+        for t in range(old_nc // stride + 1, new_nc // stride + 1):
+            end = t * stride
+            if end <= len(r.prompt):
+                self.pool.publish_prefix(tuple(r.prompt[:end]),
+                                         r.blocks.ids[t - 1])
 
     def _sample(self, req: Request, row: np.ndarray) -> int:
         t = req.sampling.temperature
@@ -279,11 +368,49 @@ class ServingEngine:
                 raise RuntimeError(f"drain exceeded max_steps={limit}")
         self.queue.finish()
 
+    def stream(self, prompt: Sequence[int],
+               sampling: Optional[SamplingParams] = None) -> Iterator[int]:
+        """Streaming facade: submit one request NOW (the TTFT clock starts
+        here, and other drivers can advance it before the first ``next()``)
+        and return a generator yielding its tokens as they are sampled.
+        Each ``next()`` drives the WHOLE engine forward (concurrent
+        requests keep advancing), so interleaving streams with
+        ``submit()``/``step()`` is legal; the yielded sequence is exactly
+        what :func:`repro.serve.engine.api.generate` would return for the
+        same prompt/params.  Abandoning the generator early (close /
+        GeneratorExit) cancels the request, releasing its KV blocks instead
+        of leaving it running headless."""
+        req = self.submit(prompt, sampling)
+
+        def _gen():
+            emitted = 0
+            try:
+                while not req.is_finished:
+                    if not self.step():
+                        break
+                    while emitted < len(req.output_tokens):
+                        yield req.output_tokens[emitted]
+                        emitted += 1
+                while emitted < len(req.output_tokens):
+                    yield req.output_tokens[emitted]
+                    emitted += 1
+            finally:
+                if not req.is_finished:
+                    self.cancel(req.request_id)
+
+        return _gen()
+
     # -- observability -----------------------------------------------------
+
+    @property
+    def prefill_chunk_ladder(self) -> Tuple[int, ...]:
+        """Effective chunked-prefill lengths (config ladder capped by s_max,
+        ascending; empty = token-stepped prefill)."""
+        return self._chunks
 
     def kernel_events(self):
         return {name: ev for name, ev in self.queue.events.items()
-                if name.startswith("serve_step_bs")}
+                if name.startswith(("serve_step_bs", "prefill_bs"))}
 
     def throughput_tok_s(self) -> float:
         """Generated tokens / wall-span of step-kernel activity, derived

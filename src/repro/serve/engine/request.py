@@ -78,6 +78,9 @@ class Request:
         self.blocks = None                   # SequenceBlocks while scheduled
         self.finish_reason: Optional[str] = None
         self.n_preemptions = 0
+        # perf_counter stamps for time-to-first-token (0.0 = not yet)
+        self.submit_t = 0.0
+        self.first_token_t = 0.0
 
     # -- sequence view -----------------------------------------------------
 
@@ -94,6 +97,21 @@ class Request:
     def samples_this_step(self) -> bool:
         """True when the next step's logits extend the sequence."""
         return self.num_cached == len(self.seq_tokens) - 1
+
+    @property
+    def remaining_known(self) -> int:
+        """Known-but-unfed tokens: the prompt (plus replayed outputs) still
+        to ingest while prefilling, exactly 1 in steady-state decode.  The
+        engine sizes chunked-prefill launches from the per-slot values the
+        scheduler exposes (``ScheduledStep.remaining``)."""
+        return len(self.seq_tokens) - self.num_cached
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit-to-first-sampled-token latency (None until sampled)."""
+        if self.submit_t and self.first_token_t:
+            return self.first_token_t - self.submit_t
+        return None
 
     @property
     def is_finished(self) -> bool:

@@ -68,6 +68,13 @@ class ScheduledStep:
     slot_map: List[int]              # new slot -> previous slot (-1 = none)
     admitted: List[Request]
     preempted: List[Request]
+    # per-slot known-but-unfed token counts (0 = idle slot; 1 = steady-state
+    # decode; >1 = prompt/replay still to ingest).  The engine picks the
+    # chunked-prefill length L from these, so a launch may mix decode slots
+    # (one position) with prefill slots (up to L positions) — admission
+    # already guaranteed each slot's block table covers its whole sequence,
+    # so any chunk within `remaining` is backed by allocated pages.
+    remaining: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def is_prefill(self) -> bool:
@@ -77,6 +84,11 @@ class ScheduledStep:
         invocation."""
         return any(r is not None and r.state == RequestState.PREFILL
                    for r in self.slots)
+
+    @property
+    def max_remaining(self) -> int:
+        """Largest per-slot backlog: >1 iff some slot is mid-prefill."""
+        return max(self.remaining, default=0)
 
 
 class Scheduler:
@@ -246,5 +258,7 @@ class Scheduler:
             if r.num_cached > 0 and prev is not None:
                 slot_map[s] = prev
         self._bucket = bucket
+        remaining = [0 if r is None else r.remaining_known for r in slots]
         return ScheduledStep(bucket=bucket, slots=slots, slot_map=slot_map,
-                             admitted=admitted, preempted=preempted)
+                             admitted=admitted, preempted=preempted,
+                             remaining=remaining)

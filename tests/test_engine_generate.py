@@ -80,7 +80,9 @@ def test_generate_matches_single_shot_decode(mesh16, plan16):
 
 def test_mixed_length_workload_one_executable_per_bucket(mesh16, plan16):
     """16 requests of mixed prompt/output lengths share bucketed
-    executables: no per-request (or per-shape) recompiles."""
+    executables: no per-request (or per-shape) recompiles.  Since chunked
+    prefill the invariant is one executable per (bucket, chunk-length)
+    actually used — and prefill launches amortize over prompt tokens."""
     ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8), block_pos_stride=4)
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
     rng = np.random.default_rng(1)
@@ -94,10 +96,19 @@ def test_mixed_length_workload_one_executable_per_bucket(mesh16, plan16):
     for c, sp in zip(outs, sampling):
         assert c.finish_reason == "length"
         assert len(c.tokens) == sp.max_tokens
-    # at most one compiled executable per batch bucket actually used
+    # at most one compiled executable per (bucket, chunk-length) used
     used = set(eng.kernel_events())
-    assert eng.queue.n_executables == len(used) <= len(ec.buckets)
-    assert all(name.startswith("serve_step_bs") for name in used)
+    assert eng.queue.n_executables == len(used)
+    decode_used = {n for n in used if n.startswith("serve_step_bs")}
+    chunk_used = {n for n in used if n.startswith("prefill_bs")}
+    assert used == decode_used | chunk_used
+    assert len(decode_used) <= len(ec.buckets)
+    assert 0 < len(chunk_used) <= \
+        len(ec.buckets) * len(eng.prefill_chunk_ladder)
+    # launches != tokens: chunked prefill amortizes prompt ingestion
+    assert eng.stats.prefill_chunk_launches > 0
+    assert eng.stats.prefill_launches < eng.stats.prompt_tokens_ingested
+    assert eng.stats.prompt_tokens_ingested == sum(len(p) for p in prompts)
     assert eng.stats.tokens_generated == sum(len(c.tokens) for c in outs)
     assert eng.throughput_tok_s() > 0.0
     assert eng.stats.prefill_launches > 0 and eng.stats.decode_launches > 0
@@ -119,7 +130,7 @@ def test_preemption_under_tiny_pool_still_completes(mesh16, plan16):
     # pool holds 12 positions total; three 4-token prompts generating 6
     # tokens each cannot coexist -> scheduler must preempt and recompute
     ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2,
-                      n_kv_blocks=6, max_steps=400)
+                      n_kv_blocks=6, max_steps=400, prefill_chunks=())
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
     rng = np.random.default_rng(2)
     prompts = [rng.integers(0, CFG.vocab_size, size=4).tolist()
@@ -136,12 +147,13 @@ def test_preemption_recompute_preserves_greedy_tokens(mesh16, plan16):
     rng = np.random.default_rng(3)
     prompts = [rng.integers(0, CFG.vocab_size, size=4).tolist()
                for _ in range(3)]
-    big = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2)
+    big = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2,
+                       prefill_chunks=())
     eng_big = build_engine(CFG, mesh16, plan16, engine_cfg=big, seed=0)
     baseline = generate(eng_big, prompts, SamplingParams(max_tokens=6))
 
     tiny = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=2,
-                        n_kv_blocks=6, max_steps=400)
+                        n_kv_blocks=6, max_steps=400, prefill_chunks=())
     eng_tiny = build_engine(CFG, mesh16, plan16, engine_cfg=tiny, seed=0)
     preempted = generate(eng_tiny, prompts, SamplingParams(max_tokens=6))
     assert eng_tiny.scheduler.n_preemptions > 0
@@ -150,7 +162,8 @@ def test_preemption_recompute_preserves_greedy_tokens(mesh16, plan16):
 
 
 def test_eos_and_cancellation(mesh16, plan16):
-    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4)
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4,
+                      prefill_chunks=())
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
     prompt = [3, 14, 15]
     [probe] = generate(eng, [prompt], SamplingParams(max_tokens=4))
@@ -180,7 +193,8 @@ def test_identical_prompts_share_physical_pages(mesh16, plan16):
     peak pool occupancy stays strictly under 2x the solo footprint — and
     the adopted (never recomputed) KV yields identical greedy tokens."""
     stride, plen, n_tok = 4, 9, 4
-    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride)
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride,
+                      prefill_chunks=())
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
     prompt = np.random.default_rng(7).integers(
         0, CFG.vocab_size, size=plen).tolist()
@@ -202,7 +216,8 @@ def test_fork_shares_prompt_pages_and_matches_greedy(mesh16, plan16):
     parent's prompt pages (device memory dedupe) and, under greedy
     sampling, reproduces the parent's tokens exactly."""
     stride, plen, n_tok = 4, 9, 4
-    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride)
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride,
+                      prefill_chunks=())
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
     prompt = np.random.default_rng(8).integers(
         0, CFG.vocab_size, size=plen).tolist()
@@ -221,7 +236,8 @@ def test_fork_shares_prompt_pages_and_matches_greedy(mesh16, plan16):
 def test_rngs_are_dropped_on_finish_and_cancel(mesh16, plan16):
     """Per-request sampling RNGs must not outlive their request (a leak
     here grows host memory unboundedly in a long-running server)."""
-    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=4)
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=4,
+                      prefill_chunks=())
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
     rng = np.random.default_rng(9)
     p1 = rng.integers(0, CFG.vocab_size, size=3).tolist()

@@ -1,0 +1,157 @@
+"""Chunked multi-token prefill (`prefill_bs{N}_len{L}`): launch-count wins
+with token-for-token parity against the per-token engine.
+
+The load-bearing assertions: (1) a chunked engine emits exactly the tokens
+the token-stepped engine emits for the same prompts/params — across chunk
+boundaries, prompt lengths that are multiples of nothing, prefix-adopted
+prompts resuming mid-chunk, forks, and preemption replay; (2) prompt
+ingestion costs O(prompt / L) launches, not O(prompt)."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import (EngineConfig, SamplingParams, build_engine,
+                                generate)
+
+CFG = ModelConfig(name="chk", family="dense", d_model=64, n_layers=2,
+                  n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                  attn_block_kv=32)
+S_MAX = 32
+
+
+def _engine(mesh, plan, *, chunks, params=None, stride=4, buckets=(1, 2, 4),
+            s_max=S_MAX, n_kv_blocks=None, max_steps=None, seed=0):
+    ec = EngineConfig(s_max=s_max, buckets=buckets, block_pos_stride=stride,
+                      n_kv_blocks=n_kv_blocks, max_steps=max_steps,
+                      prefill_chunks=chunks)
+    return build_engine(CFG, mesh, plan, engine_cfg=ec, params=params,
+                        seed=seed)
+
+
+def test_chunked_matches_per_token_across_odd_boundaries(mesh16, plan16):
+    """Prompt lengths that are multiples of neither the chunk lengths nor
+    block_pos_stride (and one that spans two chunks) must bit-match the
+    token-stepped engine — and pay strictly fewer prefill launches."""
+    rng = np.random.default_rng(0)
+    plens = [9, 20, 5, 13]
+    prompts = [rng.integers(0, CFG.vocab_size, size=n).tolist()
+               for n in plens]
+
+    ref = _engine(mesh16, plan16, chunks=())          # token-stepped
+    expect = generate(ref, prompts, SamplingParams(max_tokens=6))
+
+    eng = _engine(mesh16, plan16, chunks=(4, 16), params=ref.params)
+    outs = generate(eng, prompts, SamplingParams(max_tokens=6))
+    for e, c in zip(expect, outs):
+        assert c.tokens == e.tokens
+        assert c.finish_reason == "length"
+        assert c.ttft_s is not None and c.ttft_s > 0.0
+
+    # same tokens ingested, amortized over far fewer enqueues
+    assert eng.stats.prompt_tokens_ingested == \
+        ref.stats.prompt_tokens_ingested == sum(plens)
+    assert eng.stats.prefill_chunk_launches > 0
+    assert eng.stats.prefill_launches < ref.stats.prefill_launches
+    assert eng.stats.prefill_launches < eng.stats.prompt_tokens_ingested
+    assert any(n.startswith("prefill_bs") for n in eng.kernel_events())
+    assert not any(n.startswith("prefill_bs") for n in ref.kernel_events())
+
+
+def test_prompt_ingests_in_ceil_p_over_l_launches(mesh16, plan16):
+    """A P-token prompt must reach its first sampled token in
+    ceil(P / L) launches (the acceptance bound), not P."""
+    P, L = 33, 16
+    prompt = np.random.default_rng(1).integers(
+        0, CFG.vocab_size, size=P).tolist()
+    eng = _engine(mesh16, plan16, chunks=(L,), s_max=48, buckets=(1,))
+    req = eng.submit(prompt, SamplingParams(max_tokens=2))
+    launches = 0
+    while not req.output_tokens:
+        assert eng.step()
+        launches += 1
+    assert launches == -(-P // L) == 3              # vs P=33 at HEAD
+    assert eng.stats.prompt_tokens_ingested == P
+    assert eng.stats.prefill_launches == launches
+
+
+def test_prefix_adoption_resumes_mid_chunk(mesh16, plan16):
+    """A request admitted against published prompt pages starts its first
+    chunk at an arbitrary offset inside a page (num_cached = 8, page
+    boundary at 8, chunk tail of 3) and still reproduces the donor's
+    greedy tokens."""
+    stride, plen, n_tok = 4, 11, 4
+    prompt = np.random.default_rng(2).integers(
+        0, CFG.vocab_size, size=plen).tolist()
+    eng = _engine(mesh16, plan16, chunks=(16,), stride=stride,
+                  buckets=(1, 2))
+    a = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.step()                       # one chunk ingests the whole prompt...
+    assert a.output_tokens and a.num_cached == plen
+    b = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.step()
+    # ...whose full pages (positions 0..8) b adopted at admission: its
+    # first chunk resumed mid-prompt, mid-page
+    assert b.num_cached >= 2 * stride
+    eng.drain()
+    assert b.output_tokens == a.output_tokens
+    solo = eng.pool.blocks_for(plen + n_tok + 1)
+    shared = (plen - 1) // stride
+    assert eng.stats.peak_blocks_used <= 2 * solo - shared < 2 * solo
+
+
+def test_fork_after_chunked_prefill_shares_pages(mesh16, plan16):
+    stride, plen, n_tok = 4, 9, 4
+    prompt = np.random.default_rng(3).integers(
+        0, CFG.vocab_size, size=plen).tolist()
+    eng = _engine(mesh16, plan16, chunks=(16,), stride=stride,
+                  buckets=(1, 2))
+    parent = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.step()                                   # chunked prefill completes
+    assert parent.output_tokens
+    child = eng.fork(parent)
+    eng.drain()
+    assert child.output_tokens == parent.output_tokens
+    solo = eng.pool.blocks_for(plen + n_tok + 1)
+    assert eng.stats.peak_blocks_used <= 2 * solo - (plen - 1) // stride
+
+
+def test_chunked_preemption_replay_matches(mesh16, plan16):
+    """Recompute-style preemption replays prompt AND generated tokens
+    through chunked launches; greedy outputs must be invariant."""
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, CFG.vocab_size, size=4).tolist()
+               for _ in range(3)]
+    big = _engine(mesh16, plan16, chunks=(4,), stride=2)
+    baseline = generate(big, prompts, SamplingParams(max_tokens=6))
+    tiny = _engine(mesh16, plan16, chunks=(4,), stride=2, n_kv_blocks=6,
+                   max_steps=400, params=big.params)
+    outs = generate(tiny, prompts, SamplingParams(max_tokens=6))
+    assert tiny.scheduler.n_preemptions > 0
+    for b, p in zip(baseline, outs):
+        assert b.tokens == p.tokens
+
+
+def test_stream_matches_generate(mesh16, plan16):
+    """engine.stream() yields, incrementally, exactly the tokens
+    generate() returns for the same prompt/params."""
+    prompt = np.random.default_rng(5).integers(
+        0, CFG.vocab_size, size=7).tolist()
+    eng = _engine(mesh16, plan16, chunks=(4, 16))
+    [c] = generate(eng, [prompt], SamplingParams(max_tokens=6))
+    it = eng.stream(prompt, SamplingParams(max_tokens=6))
+    streamed = [next(it)]                        # first token arrives alone
+    assert streamed[0] == c.tokens[0]
+    streamed.extend(it)
+    assert streamed == c.tokens and len(streamed) == 6
+    assert not eng.scheduler.has_work            # stream drained its request
+
+    # abandoning a stream must cancel its request and free its KV blocks
+    # (a disconnected client must not keep generating headless)
+    it = eng.stream(prompt, SamplingParams(max_tokens=6))
+    assert next(it) == c.tokens[0]
+    it.close()
+    assert not eng.scheduler.has_work
+    assert eng.pool.n_free == eng.pool.n_blocks
