@@ -8,24 +8,30 @@ chunked prefill — time-to-first-token plus the prefill launches-vs-tokens
 split (one ``prefill_bs{N}_len{L}`` enqueue ingests up to L prompt tokens
 per slot, so launches < tokens ingested by construction).
 
-Full runs also write ``BENCH_serve.json`` at the repo root, seeding a
-machine-readable benchmark trajectory across PRs (smoke runs leave it
-alone unless ``--json`` is passed explicitly).
+``BENCH_serve.json`` at the repo root is a **trajectory**: a list of run
+records (config name + CLI-passed timestamp + the metric payload), appended
+to — never overwritten — so regressions are visible across PRs.  Full runs
+append by default; smoke runs leave it alone unless ``--json`` is passed
+explicitly.
 
 Standalone:
   XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
-  PYTHONPATH=src python benchmarks/serve_throughput.py
+  PYTHONPATH=src python benchmarks/serve_throughput.py \\
+      [--config mamba2_780m] [--timestamp 2026-07-28T00:00:00Z]
 
-``--steps N`` runs a smoke pass: the workload is submitted but only N engine
-steps execute (one bucket executable compiles, no warm-up) — CI uses this to
-keep the benchmark path from rotting without paying a full run, and it
-asserts the chunked-prefill amortization invariant (strictly fewer prefill
-launches than prompt tokens ingested).
+``--config`` serves a reduced registry architecture instead of the built-in
+dense bench model — including SSM/hybrid families, which exercise the dense
+StateSpec path end to end.  ``--steps N`` runs a smoke pass: the workload is
+submitted but only N engine steps execute (one bucket executable compiles,
+no warm-up) — CI uses this to keep the benchmark path from rotting without
+paying a full run, and it asserts the chunked-prefill amortization
+invariant (strictly fewer prefill launches than prompt tokens ingested).
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import sys
@@ -57,15 +63,45 @@ def _workload(rng, vocab):
     return prompts, sampling
 
 
-def run(report, steps=None, json_path="auto"):
-    # "auto": full runs seed the committed BENCH_serve.json trajectory;
-    # smoke (--steps) runs never clobber it unless --json asks explicitly
+def _bench_config(name):
+    if name in (None, "srv-bench"):
+        return ModelConfig(name="srv-bench", family="dense", d_model=128,
+                           n_layers=4, n_heads=8, n_kv_heads=4, d_ff=512,
+                           vocab_size=1024, param_dtype=jnp.float32,
+                           compute_dtype=jnp.float32, attn_block_kv=32)
+    from repro.configs import get_config
+    from repro.configs.registry import reduced
+    return reduced(get_config(name.replace("_", "-")))
+
+
+def _append_trajectory(json_path, record):
+    """BENCH_serve.json holds a LIST of run records; append, never clobber
+    (a pre-trajectory single-record file is adopted as the list head).  An
+    unreadable file is preserved under ``<path>.corrupt`` instead of being
+    silently overwritten — the trajectory is the cross-PR record."""
+    history = []
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                prev = json.load(f)
+            history = prev if isinstance(prev, list) else [prev]
+        except (json.JSONDecodeError, OSError):
+            os.replace(json_path, json_path + ".corrupt")
+            print(f"warning: unreadable trajectory moved to "
+                  f"{json_path}.corrupt", file=sys.stderr)
+    history.append(record)
+    with open(json_path, "w") as f:
+        json.dump(history, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return len(history)
+
+
+def run(report, steps=None, json_path="auto", config=None, timestamp=None):
+    # "auto": full runs append to the committed BENCH_serve.json trajectory;
+    # smoke (--steps) runs never touch it unless --json asks explicitly
     if json_path == "auto":
         json_path = None if steps is not None else JSON_PATH
-    cfg = ModelConfig(name="srv-bench", family="dense", d_model=128,
-                      n_layers=4, n_heads=8, n_kv_heads=4, d_ff=512,
-                      vocab_size=1024, param_dtype=jnp.float32,
-                      compute_dtype=jnp.float32, attn_block_kv=32)
+    cfg = _bench_config(config)
     mesh = jax.make_mesh((1, 16), (DATA, MODEL),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
     plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
@@ -142,6 +178,9 @@ def run(report, steps=None, json_path="auto"):
     if json_path:
         payload = {
             "bench": "serve_throughput",
+            "config": cfg.name,
+            "timestamp": timestamp or datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"),
             "mode": "smoke" if steps is not None else "full",
             "tokens_per_sec": round(tok_s, 2),
             "tokens_generated": st.tokens_generated,
@@ -156,12 +195,12 @@ def run(report, steps=None, json_path="auto"):
             "executables": sorted(eng.kernel_events()),
             "peak_kv_blocks_used": st.peak_blocks_used,
             "peak_kv_bytes_resident": eng.peak_kv_bytes(),
+            "peak_dense_slots_used": st.peak_dense_slots_used,
             "migrations": st.migrations,
         }
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-            f.write("\n")
-        report("serve.engine.json", os.path.relpath(json_path), "written")
+        n = _append_trajectory(json_path, payload)
+        report("serve.engine.json", os.path.relpath(json_path),
+               f"trajectory appended ({n} records)")
     return tok_s
 
 
@@ -169,17 +208,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=None,
                     help="smoke mode: run only N engine steps")
+    ap.add_argument("--config", default="srv-bench",
+                    help="registry architecture to serve (reduced smoke "
+                         "sibling), e.g. mamba2_780m; default: the built-in "
+                         "dense bench model")
+    ap.add_argument("--timestamp", default=None,
+                    help="timestamp recorded in the trajectory entry "
+                         "(default: current UTC time)")
     ap.add_argument("--json", default=None,
-                    help="write machine-readable results to this path "
+                    help="append machine-readable results to this path "
                          "(default: BENCH_serve.json on full runs only; "
-                         "smoke runs don't clobber the trajectory)")
+                         "smoke runs don't touch the trajectory)")
     args = ap.parse_args()
     print("name,value,derived")
 
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
-    run(report, steps=args.steps, json_path=args.json or "auto")
+    run(report, steps=args.steps, json_path=args.json or "auto",
+        config=args.config, timestamp=args.timestamp)
 
 
 if __name__ == "__main__":

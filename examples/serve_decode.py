@@ -4,8 +4,15 @@ comparing decode modes.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
   PYTHONPATH=src python examples/serve_decode.py
+
+With ``--config <arch>`` (e.g. ``--config mamba2_780m``) the script instead
+serves that architecture's reduced smoke sibling through the
+continuous-batching engine — the StateSpec ABI makes SSM and hybrid
+families first-class engine citizens (dense per-slot state rides alongside
+paged KV).
 """
 
+import argparse  # noqa: E402
 import os
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
@@ -24,13 +31,45 @@ from repro.partition import DATA, MeshPlan, MODEL  # noqa: E402
 from repro.serve.decode import (cache_pspecs, cache_specs,  # noqa: E402
                                 make_decode_step)
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--config", default=None,
+                help="registry arch for an engine smoke run (reduced "
+                     "sibling), e.g. mamba2_780m; underscores accepted")
+ARGS = ap.parse_args()
+
+mesh = jax.make_mesh((1, 16), (DATA, MODEL),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+
+if ARGS.config:
+    # engine smoke on a registry architecture (SSM/hybrid included)
+    from repro.configs import get_config  # noqa: E402
+    from repro.configs.registry import reduced  # noqa: E402
+    from repro.serve.engine import (EngineConfig, SamplingParams,  # noqa: E402
+                                    build_engine, generate)
+    smoke = reduced(get_config(ARGS.config.replace("_", "-")))
+    eng = build_engine(smoke, mesh, plan, seed=0,
+                       engine_cfg=EngineConfig(s_max=64, buckets=(1, 2, 4),
+                                               block_pos_stride=16))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, min(smoke.vocab_size, 256),
+                            size=int(rng.integers(2, 9))).tolist()
+               for _ in range(4)]
+    outs = generate(eng, prompts, SamplingParams(max_tokens=8))
+    for c in outs:
+        print(f"{smoke.name} {c.request_id}: prompt[{len(c.prompt)}] -> "
+              f"{c.tokens} ({c.finish_reason})")
+    print(f"{smoke.name} ({smoke.family}): "
+          f"state operands {eng.state_specs.step_operands()}, "
+          f"{eng.stats.tokens_generated} tokens, "
+          f"{eng.queue.n_executables} executables, "
+          f"peak state bytes {eng.peak_kv_bytes()}")
+    raise SystemExit(0)
+
 cfg = ModelConfig(name="srv", family="dense", d_model=256, n_layers=4,
                   n_heads=8, n_kv_heads=4, d_ff=1024, vocab_size=4096,
                   param_dtype=jnp.float32, compute_dtype=jnp.float32,
                   attn_block_kv=64)
-mesh = jax.make_mesh((1, 16), (DATA, MODEL),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
 B, S_MAX, N_TOK = 4, 128, 24
 
 for mode in ("batched", "gemv"):

@@ -30,7 +30,10 @@ from repro.serve.decode import cache_pspecs, cache_specs, make_decode_step
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_NAMES))
+    # --config is an alias (underscores accepted: mamba2_780m == mamba2-780m)
+    ap.add_argument("--arch", "--config", dest="arch", required=True,
+                    type=lambda s: s.replace("_", "-"),
+                    choices=list(ARCH_NAMES))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--s-max", type=int, default=64)
@@ -96,11 +99,8 @@ def main():
 def _main_engine(cfg, mesh, plan, args):
     from repro.serve.engine import (EngineConfig, SamplingParams,
                                     build_engine, generate)
-    if any(mixer != "attn" for mixer, _ in cfg.pattern()):
-        raise SystemExit(
-            f"--engine pages attention KV only; {args.arch} has SSM layers "
-            "(use the fixed-batch path: drop --engine)")
-    # paged engine: s_max must be a multiple of the KV page stride
+    # every mixer maps to a StateSpec (paged KV for attn, dense slots for
+    # SSM), so dense/moe/hybrid/ssm families all serve through the engine
     stride = 16
     s_max = -(-max(args.s_max, args.tokens + 12) // stride) * stride
     buckets = tuple(b for b in (1, 2, 4, 8) if b <= max(args.batch, 1))
@@ -121,7 +121,10 @@ def _main_engine(cfg, mesh, plan, args):
     ev = eng.kernel_events()
     st = eng.stats
     ttfts = [c.ttft_s for c in outs if c.ttft_s is not None]
-    print(f"served {len(outs)} requests / {st.tokens_generated} tokens: "
+    kinds = ["paged KV" if eng.store.needs_pages else None,
+             "dense slots" if eng.store.has_dense else None]
+    print(f"served {len(outs)} requests / {st.tokens_generated} tokens "
+          f"({cfg.family}: {' + '.join(k for k in kinds if k)}): "
           f"{eng.throughput_tok_s():.1f} tok/s over {len(ev)} executables "
           f"{sorted(ev)}")
     # launches != tokens since chunked prefill: one prefill_bs{N}_len{L}

@@ -157,6 +157,73 @@ def mamba_block(pctx: ParallelContext, p: Dict, x: jax.Array, cfg
     return out, (tail, final_state)
 
 
+def mamba_chunk_step(pctx: ParallelContext, p: Dict, x: jax.Array,
+                     state: Tuple, cfg, n_valid: jax.Array
+                     ) -> Tuple[jax.Array, Tuple]:
+    """Multi-token state advance for chunked prefill (gemv layout).
+
+    x (B, L, D_loc) row-replicated; state = (conv_state (B, k-1, conv_loc)
+    PRE-activation, ssm_state (B, H_loc, N, P) fp32).  Slot b consumes chunk
+    positions [0, n_valid[b]): padding columns are state-neutral (their
+    ``dt`` is zeroed, so the SSD recurrence is the identity there, and the
+    conv window gathers the last k-1 inputs *before* ``n_valid``), which
+    lets one compiled executable serve every partial chunk — the same
+    ``n_valid`` contract the paged-attention chunk path uses.  At
+    ``n_valid == 1`` this computes :func:`mamba_decode_step`'s update, so
+    decode-phase slots ride through chunked launches unchanged.
+    """
+    conv_state, ssm_state = state
+    B, L = x.shape[:2]
+    H_loc = cfg.ssm_heads // pctx.r
+    P, G, N = cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    di_loc = H_loc * P
+    gn_loc = G * N // pctx.r
+    kconv = cfg.conv_kernel
+    _, j = pctx.grid.my_coords()
+
+    z, xc, Bc, Cc, dt = fused_dense(
+        pctx, x, [p["wz"], p["wx"], p["wb"], p["wc"], p["wdt"]])
+    xBC = jnp.concatenate([xc, Bc, Cc], axis=-1)             # (B, L, conv_loc)
+    halo = conv_state.astype(xBC.dtype)
+    conv_w = _conv_param_slice(pctx, p["conv_w"], di=cfg.d_inner,
+                               gn=G * N, r=pctx.r)
+    conv_b = _conv_param_slice(pctx, p["conv_b"], di=cfg.d_inner,
+                               gn=G * N, r=pctx.r)
+    out = _conv1d_causal(xBC, conv_w, conv_b, halo)
+    # new conv window: the last (k-1) PRE-activation inputs at positions
+    # strictly before n_valid (n_valid = 0 leaves the state untouched)
+    full = jnp.concatenate([halo, xBC], axis=1)              # (B, k-1+L, C)
+    gidx = n_valid[:, None] + jnp.arange(kconv - 1)[None, :]
+    new_conv_state = jnp.take_along_axis(full, gidx[..., None], axis=1)
+    xBC_a = jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+    xc_a, Bc_a, Cc_a = (xBC_a[..., :di_loc],
+                        xBC_a[..., di_loc:di_loc + gn_loc],
+                        xBC_a[..., di_loc + gn_loc:])
+
+    B_full = pctx.grid.all_gather_cols(Bc_a, axis=-1).reshape(B, L, G, N)
+    C_full = pctx.grid.all_gather_cols(Cc_a, axis=-1).reshape(B, L, G, N)
+    Bg = _slice_groups(B_full, G, pctx.r, j, axis=2)
+    Cg = _slice_groups(C_full, G, pctx.r, j, axis=2)
+
+    A_loc = col_slice(pctx, p["A"], n_loc=H_loc).astype(jnp.float32)
+    dtb = col_slice(pctx, p["dt_bias"], n_loc=H_loc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dtb)       # (B, L, H_loc)
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]        # (B, L)
+    dt = jnp.where(valid[..., None], dt, 0.0)   # dt=0: identity recurrence
+    xh = xc_a.reshape(B, L, H_loc, P)
+    y, new_ssm = ssd_scan(xh, dt, A_loc, Bg, Cg,
+                          init_state=ssm_state.astype(jnp.float32),
+                          chunk=L, backend="jnp")
+
+    Dskip = col_slice(pctx, p["D"], n_loc=H_loc).astype(jnp.float32)
+    y = y.astype(jnp.float32) + Dskip[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, L, di_loc) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(pctx, y.astype(x.dtype), p["ssm_norm"])
+    out = dense(pctx, y, p["wo"])
+    return out, (new_conv_state, new_ssm)
+
+
 def mamba_decode_step(pctx: ParallelContext, p: Dict, x: jax.Array,
                       state: Tuple, cfg) -> Tuple[jax.Array, Tuple]:
     """Single-token decode.  x (B_loc, 1, D_loc); state = (conv_state

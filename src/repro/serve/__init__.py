@@ -1,1 +1,4 @@
-from repro.serve.decode import cache_pspecs, cache_specs, make_decode_step, make_prefill
+from repro.serve.decode import (cache_pspecs, cache_specs, make_decode_step,
+                                make_prefill)
+from repro.serve.state import (DenseSpec, ModelStateSpecs, PagedSpec,
+                               layer_state_specs)

@@ -36,10 +36,12 @@ from repro.models.layers import (ParallelContext, apply_rope, col_slice,
                                  dense, fused_dense, rms_norm_local,
                                  rope_tables)
 from repro.models.moe import moe_block
-from repro.models.ssm import mamba_decode_step
+from repro.models.ssm import mamba_chunk_step, mamba_decode_step
 from repro.models.transformer import (_norm, apply_layer, embed_tokens,
                                       forward, mlp_apply, param_specs)
 from repro.partition import DATA, MODEL, POD, MeshPlan
+from repro.serve.state import (ModelStateSpecs, layer_state_specs,
+                               pattern_pspecs)
 from repro.train.step import make_pctx
 
 
@@ -74,34 +76,26 @@ class PagedKV:
         return -(-self.n_blocks // q)
 
 
-def paged_cache_specs(cfg: ModelConfig, plan: MeshPlan,
-                      paged: PagedKV) -> Any:
-    """ShapeDtypeStruct pytree for the bucket-independent paged KV arena."""
-    q, r = plan.grid_q, plan.grid_r
-    n_pes = q * r
-    G = cfg.n_groups()
-    if cfg.enc_layers:
-        raise NotImplementedError("paged KV: encoder cross caches are dense")
-    kvh = cfg.kv_stored(r)[0] // r
-    hd = cfg.hd()
-    dt = cfg.compute_dtype
-    shape = (G, n_pes, paged.blocks_local(q), paged.block_pos_stride, kvh, hd)
-    entries = []
-    for (mixer, ffn) in cfg.pattern():
-        if mixer != "attn":
-            raise NotImplementedError(
-                f"paged KV covers attention mixers only, got {mixer!r} "
-                "(SSM state is O(1) per slot and needs no paging)")
-        entries.append({"k": jax.ShapeDtypeStruct(shape, dt),
-                        "v": jax.ShapeDtypeStruct(shape, dt)})
-    return entries
+def paged_cache_specs(cfg: ModelConfig, plan: MeshPlan, paged: PagedKV, *,
+                      n_dense_slots: int = 0) -> Any:
+    """ShapeDtypeStruct pytree for the bucket-independent engine state arena.
+
+    Spec-driven (:mod:`repro.serve.state`): attention layers contribute
+    paged K/V leaves, SSM layers contribute dense per-slot ``conv``/``ssm``
+    leaves (``n_dense_slots`` rows; required > 0 when any layer is dense).
+    """
+    specs = layer_state_specs(cfg, plan, stride=paged.block_pos_stride)
+    if specs.has_dense and n_dense_slots < 1:
+        raise ValueError(
+            f"{cfg.name}: dense-state layers need n_dense_slots >= 1")
+    return specs.arena_specs(paged.n_blocks, n_dense_slots)
 
 
 def paged_cache_pspecs(cfg: ModelConfig) -> Any:
-    """Arena boundary specs: pages are row-sharded *inside* the flat MODEL
-    axis (dim 1), never batch-sharded — the arena is bucket-independent."""
-    return [{"k": P(None, MODEL), "v": P(None, MODEL)}
-            for _ in cfg.pattern()]
+    """Arena boundary specs: pages AND dense slots are sharded *inside* the
+    flat MODEL axis (dim 1), never batch-sharded — the arena is
+    bucket-independent (see ``repro.serve.state.pattern_pspecs``)."""
+    return pattern_pspecs(cfg)
 
 
 def cache_specs(cfg: ModelConfig, plan: MeshPlan, batch: int, s_max: int,
@@ -449,6 +443,29 @@ def _attn_prefill_chunk_paged(pctx, p, x, cfg, kc, vc, pos, n_valid, table,
     return y, kc, vc
 
 
+def _dense_slot_gather(arena_leaves, slots):
+    """Gather each batch lane's dense state rows from the slot arena.
+
+    ``arena_leaves`` maps name -> (n_slots, ...) local arena; ``slots`` (B,)
+    holds each lane's slot id (-1 = idle lane, which reads slot 0 as a dummy
+    and never writes back).  The dense analogue of :func:`_paged_gather` —
+    sequence identity lives in the host-built slot vector, so fork /
+    migration / preemption never reorder arena rows."""
+    n_slots = next(iter(arena_leaves.values())).shape[0]
+    idx = jnp.clip(slots, 0, n_slots - 1)
+    return {name: jnp.take(a, idx, axis=0) for name, a in arena_leaves.items()}
+
+
+def _dense_slot_scatter(arena_leaves, new_leaves, slots):
+    """Write advanced per-lane dense state back to its slot row (idle lanes,
+    slots == -1, are routed out of bounds and dropped)."""
+    n_slots = next(iter(arena_leaves.values())).shape[0]
+    li = jnp.where(slots >= 0, slots, n_slots)
+    return {name: arena_leaves[name].at[li].set(
+        new_leaves[name].astype(arena_leaves[name].dtype), mode="drop")
+        for name in arena_leaves}
+
+
 # ---------------------------------------------------------------------------
 # Decode layer + step.
 # ---------------------------------------------------------------------------
@@ -471,7 +488,7 @@ def _cross_decode(pctx, p, x, cfg, ck, cv):
 
 
 def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
-                  table=None, paged=None, n_valid=None):
+                  table=None, paged=None, n_valid=None, slots=None):
     ast = attn_static(cfg, pctx.r) if mixer == "attn" else None
     if mixer == "attn":
         h = _norm(pctx, cfg, p["norm1"], x)
@@ -494,6 +511,22 @@ def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
                                              reduce_data=(mode == "longctx"))
         x = x + h
         new_cache = {"k": kc, "v": vc}
+    elif slots is not None:
+        # engine path (DenseSpec): per-slot state rides in a dense slot
+        # arena addressed through the ``slots`` operand — the O(1)-state
+        # sibling of the block-table indirection above
+        h = _norm(pctx, cfg, p["norm1"], x)
+        st = _dense_slot_gather(cache, slots)
+        if n_valid is not None:
+            h, (conv, ssm) = mamba_chunk_step(pctx, p["mixer"], h,
+                                              (st["conv"], st["ssm"]), cfg,
+                                              n_valid)
+        else:
+            h, (conv, ssm) = mamba_decode_step(pctx, p["mixer"], h,
+                                               (st["conv"], st["ssm"]), cfg)
+        x = x + h
+        new_cache = _dense_slot_scatter(cache, {"conv": conv, "ssm": ssm},
+                                        slots)
     else:
         h = _norm(pctx, cfg, p["norm1"], x)
         h, (conv, ssm) = mamba_decode_step(pctx, p["mixer"], h,
@@ -566,11 +599,15 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     block table at freshly allocated pages, and stale page contents beyond
     the slot's position are causally masked.
 
-    With ``paged`` set (gemv mode only) the cache operand is the
-    bucket-independent physically paged arena of :func:`paged_cache_specs`
-    and the step takes a trailing block-table operand
-    ``(B, s_max // block_pos_stride)`` of physical page ids; ``pos`` may be
-    scalar or per-slot.
+    With ``paged`` set (gemv mode only) the cache operand is the engine
+    state arena of :func:`paged_cache_specs` and the step's trailing
+    operands derive from the per-layer state specs
+    (:func:`repro.serve.state.layer_state_specs`): a block-table operand
+    ``(B, s_max // block_pos_stride)`` of physical page ids when any layer
+    pages KV, then a ``(B,)`` dense slot-id operand when any layer carries
+    O(1) dense state; ``pos`` may be scalar or per-slot.  Attention-only
+    models keep the exact pre-StateSpec ABI
+    ``(params, arena, tokens, pos, table)``.
     """
     if tp_strategy is None:
         tp_strategy = "cannon" if mode == "batched" else "gemv"
@@ -592,6 +629,7 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         raise NotImplementedError(
             "per-slot decode needs a data-sharded batch dim "
             "(modes: batched, gemv)")
+    sspecs: Optional[ModelStateSpecs] = None
     if paged is not None:
         if mode != "gemv":
             raise NotImplementedError(
@@ -601,11 +639,16 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
             raise ValueError(
                 f"s_max={s_max} must be a multiple of "
                 f"block_pos_stride={paged.block_pos_stride}")
+        sspecs = layer_state_specs(cfg, plan, stride=paged.block_pos_stride)
 
     def body(params, cache, tokens, pos, *extra):
-        table = reset = None
-        if paged is not None:
-            table = extra[0]
+        table = reset = slots = None
+        if sspecs is not None:
+            it = iter(extra)
+            if sspecs.has_paged:
+                table = next(it)
+            if sspecs.has_dense:
+                slots = next(it)
         elif per_slot:
             reset = extra[0]
         grid = pctx.grid
@@ -638,7 +681,8 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                 x, nc = _decode_layer(pctx, cfg, mixer, ffn,
                                       group_params[posn], x,
                                       group_cache[posn], pos, shard_offset,
-                                      mode, table=table, paged=paged)
+                                      mode, table=table, paged=paged,
+                                      slots=slots)
                 new_caches.append(nc)
             return x, new_caches
 
@@ -661,15 +705,16 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         return logits, new_cache
 
     pspecs = pm.param_pspecs(specs)
-    cpspecs = paged_cache_pspecs(cfg) if paged is not None \
+    cpspecs = sspecs.arena_pspecs() if sspecs is not None \
         else cache_pspecs(cfg, mode, pctx.data_axes)
     lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
         else pctx.data_axes[0]
     tok_spec = P() if mode == "longctx" else P(lead)
     logit_spec = P() if mode == "longctx" else P(lead, None, None)
-    if paged is not None:
+    if sspecs is not None:
         pos_spec = tok_spec if per_slot else P()
-        in_specs = (pspecs, cpspecs, tok_spec, pos_spec, P(lead, None))
+        in_specs = (pspecs, cpspecs, tok_spec, pos_spec) \
+            + sspecs.operand_pspecs(lead)
     elif per_slot:
         in_specs = (pspecs, cpspecs, tok_spec, tok_spec, tok_spec)
     else:
@@ -705,22 +750,27 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                             paged: PagedKV):
     """Chunked multi-token prefill body: up to L tokens per slot per launch.
 
-    The ``prefill_bs{N}_len{L}`` ABI (gemv layout, paged arena only):
+    The ``prefill_bs{N}_len{L}`` ABI (gemv layout, engine state arena):
 
         body(params, arena, tokens (B, L), pos (B,), n_valid (B,),
-             table (B, T)) -> (logits (B, 1, V), arena)
+             *state_operands) -> (logits (B, 1, V), arena)
 
-    Slot b consumes ``tokens[b, :n_valid[b]]`` at cache positions
+    where ``state_operands`` derive from the per-layer StateSpecs exactly
+    like the decode step's: ``table (B, T)`` when any layer pages KV, then
+    ``slots (B,)`` when any layer carries dense state.  Slot b consumes
+    ``tokens[b, :n_valid[b]]`` at cache positions
     ``[pos[b], pos[b] + n_valid[b])``: the whole chunk embeds as one (B, L)
-    block, every layer scatters all valid positions' K/V into the slot's
-    block-table pages inside the SAME kernel, and blocked causal attention
-    over the gathered pages reproduces the token-stepped prefill position
-    for position.  The returned logits belong to chunk position
-    ``n_valid - 1`` — exactly the sampling logits when the chunk contains
-    the slot's final known token (``n_valid`` may be 1, so a mixed batch
-    can carry decode-phase slots through the same launch).  Prompt
-    ingestion drops from O(prompt) to O(prompt / L) enqueues — the paper's
-    amortize-the-offload rule applied to time-to-first-token.
+    block, paged layers scatter all valid positions' K/V into the slot's
+    block-table pages inside the SAME kernel (blocked causal attention over
+    the gathered pages reproduces the token-stepped prefill position for
+    position), and dense layers advance their slot state through the whole
+    valid prefix in one :func:`mamba_chunk_step`.  The returned logits
+    belong to chunk position ``n_valid - 1`` — exactly the sampling logits
+    when the chunk contains the slot's final known token (``n_valid`` may
+    be 1, so a mixed batch can carry decode-phase slots through the same
+    launch).  Prompt ingestion drops from O(prompt) to O(prompt / L)
+    enqueues — the paper's amortize-the-offload rule applied to
+    time-to-first-token.
     """
     if not 1 <= chunk <= s_max:
         raise ValueError(f"chunk must be in [1, s_max={s_max}], got {chunk}")
@@ -733,8 +783,12 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     pctx = dataclasses.replace(pctx, act_layout="repl_rows", preskewed=False)
     specs = param_specs(cfg, plan.grid_q, plan.grid_r, preskew=False)
     pattern = cfg.pattern()
+    sspecs = layer_state_specs(cfg, plan, stride=paged.block_pos_stride)
 
-    def body(params, cache, tokens, pos, n_valid, table):
+    def body(params, cache, tokens, pos, n_valid, *extra):
+        it = iter(extra)
+        table = next(it) if sspecs.has_paged else None
+        slots = next(it) if sspecs.has_dense else None
         x = _embed_decode(pctx, params["embed"], tokens, "gemv",
                           cfg.compute_dtype)
 
@@ -747,7 +801,7 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                                       group_params[posn], x,
                                       group_cache[posn], pos, 0, "gemv",
                                       table=table, paged=paged,
-                                      n_valid=n_valid)
+                                      n_valid=n_valid, slots=slots)
                 new_caches.append(nc)
             return x, new_caches
 
@@ -765,11 +819,11 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         return logits, new_cache
 
     pspecs = pm.param_pspecs(specs)
-    cpspecs = paged_cache_pspecs(cfg)
+    cpspecs = sspecs.arena_pspecs()
     lead = tuple(pctx.data_axes) if len(pctx.data_axes) > 1 \
         else pctx.data_axes[0]
-    in_specs = (pspecs, cpspecs, P(lead, None), P(lead), P(lead),
-                P(lead, None))
+    in_specs = (pspecs, cpspecs, P(lead, None), P(lead), P(lead)) \
+        + sspecs.operand_pspecs(lead)
     out_specs = (P(lead, None, None), cpspecs)
     return body, in_specs, out_specs, specs, pctx
 

@@ -19,16 +19,18 @@ operands (docs/serving.md).
 
 from repro.serve.engine.api import Completion, build_engine, generate
 from repro.serve.engine.block_cache import (BlockLayout, BlockPool,
-                                            PoolExhausted, SequenceBlocks,
-                                            block_layout)
+                                            DenseSlotPool, PoolExhausted,
+                                            SequenceBlocks, block_layout)
 from repro.serve.engine.engine import EngineConfig, EngineStats, ServingEngine
 from repro.serve.engine.request import Request, RequestState, SamplingParams
 from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
                                           SchedulerConfig)
+from repro.serve.engine.state_store import NullStateHook, StateStore
 
 __all__ = [
-    "BlockLayout", "BlockPool", "Completion", "EngineConfig", "EngineStats",
-    "PoolExhausted", "Request", "RequestState", "SamplingParams",
-    "ScheduledStep", "Scheduler", "SchedulerConfig", "SequenceBlocks",
-    "ServingEngine", "block_layout", "build_engine", "generate",
+    "BlockLayout", "BlockPool", "Completion", "DenseSlotPool",
+    "EngineConfig", "EngineStats", "NullStateHook", "PoolExhausted",
+    "Request", "RequestState", "SamplingParams", "ScheduledStep",
+    "Scheduler", "SchedulerConfig", "SequenceBlocks", "ServingEngine",
+    "StateStore", "block_layout", "build_engine", "generate",
 ]

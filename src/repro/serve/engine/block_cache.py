@@ -69,12 +69,13 @@ def block_layout(cfg, plan, *, block_pos_stride: int,
         return total
 
     if mode == "paged":
-        from repro.serve.decode import PagedKV, paged_cache_specs
-        # one page per grid row -> arena bytes / q = bytes per physical page
-        entries = paged_cache_specs(
-            cfg, plan, PagedKV(n_blocks=q, block_pos_stride=block_pos_stride))
+        from repro.serve.state import layer_state_specs
+        # the StateSpec list is the single source of truth for the per-page
+        # footprint (dense-state layers contribute zero page bytes — their
+        # residency is priced per slot, see DenseSlotPool.slot_bytes)
+        specs = layer_state_specs(cfg, plan, stride=block_pos_stride)
         return BlockLayout(block_pos_stride=block_pos_stride,
-                           bytes_per_block=_nbytes(entries) // q,
+                           bytes_per_block=specs.page_bytes(),
                            mode=mode)
 
     from repro.serve.decode import cache_specs
@@ -219,6 +220,50 @@ class BlockPool:
         self._free.remove(bid)
         self._refs[bid] = 1
         return bid
+
+
+class DenseSlotPool:
+    """Fixed pool of dense per-sequence state slots (``DenseSpec`` layers).
+
+    Dense state is O(1) per sequence and — unlike KV pages — NOT
+    ref-countable: a slot belongs to exactly one request at a time, and
+    "sharing" dense state means physically copying a snapshot into a fresh
+    slot (``engine/state_store.py``).  The pool is pure host bookkeeping
+    over the slot rows of the device state arena; ``slot_bytes`` prices one
+    slot's device residency (``ModelStateSpecs.dense_slot_bytes``).
+    """
+
+    def __init__(self, n_slots: int, slot_bytes: int = 0):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = n_slots
+        self.slot_bytes = slot_bytes
+        self._free: Deque[int] = deque(range(n_slots - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def can_alloc(self) -> bool:
+        return bool(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(f"all {self.n_slots} dense slots in use")
+        sid = self._free.pop()
+        self._used.add(sid)
+        return sid
+
+    def release(self, sid: int) -> None:
+        if sid not in self._used:
+            raise ValueError(f"release of free dense slot {sid}")
+        self._used.discard(sid)
+        self._free.append(sid)
 
 
 class SequenceBlocks:

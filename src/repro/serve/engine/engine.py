@@ -2,12 +2,17 @@
 
 Every step is one OpenCL-style kernel enqueue: the per-bucket step executable
 (``serve_step_bs{N}``, built once per bucket by ``queue.build``) consumes the
-physically paged KV arena plus per-slot ``tokens``/``pos`` vectors and a
-``(B, T)`` **block table** of physical page ids, advances every occupied slot
-by one position, and returns next-token logits.  The host loop scatters
-request tokens in, gathers sampled tokens out, and drives the request state
-machine; ``queue.finish()`` after each launch is the paper's ``clFinish`` and
-stamps the ``KernelEvent`` timestamps the throughput benchmark reads.
+engine's state arena plus per-slot ``tokens``/``pos`` vectors and the
+StateSpec-derived indirection operands — a ``(B, T)`` **block table** of
+physical page ids when any layer pages KV, a ``(B,)`` **dense slot** vector
+when any layer carries O(1) recurrent state — advances every occupied slot
+by one position, and returns next-token logits.  ``dense``, ``moe``,
+``hybrid`` and ``ssm`` families all serve through the same loop; only the
+operand list differs, and it differs by spec, not by string-matching
+mixers.  The host loop scatters request tokens in, gathers sampled tokens
+out, and drives the request state machine; ``queue.finish()`` after each
+launch is the paper's ``clFinish`` and stamps the ``KernelEvent``
+timestamps the throughput benchmark reads.
 
 The arena is ONE device allocation shared by every bucket: it is donated
 through each enqueue — across *different* bucket executables, whose cache
@@ -44,12 +49,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.hybrid import CommandQueue, HybridKernel
 from repro.models import params as pm
 from repro.serve.decode import (PagedKV, make_decode_body,
-                                make_prefill_chunk_body, paged_cache_pspecs,
-                                paged_cache_specs)
+                                make_prefill_chunk_body)
 from repro.serve.engine.block_cache import BlockPool, block_layout
 from repro.serve.engine.request import Request, RequestState, SamplingParams
 from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
                                           SchedulerConfig)
+from repro.serve.engine.state_store import StateStore
+from repro.serve.state import layer_state_specs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +69,23 @@ class EngineConfig:
     # chunked-prefill length ladder: entries above s_max are dropped, ()
     # disables chunking (token-stepped prefill, the pre-chunking behavior)
     prefill_chunks: Tuple[int, ...] = (16, 64, 256)
+    # dense state slots (DenseSpec layers); None = max bucket.  Irrelevant
+    # for attention-only models.
+    n_dense_slots: Optional[int] = None
+
+    def __post_init__(self):
+        pc = tuple(int(c) for c in self.prefill_chunks)
+        bad = [c for c in pc if c < 2]
+        if bad:
+            raise ValueError(
+                f"prefill_chunks entries must be >= 2 (an L=1 chunk is just "
+                f"a slower decode step): {bad}")
+        if list(pc) != sorted(set(pc)):
+            raise ValueError(
+                f"prefill_chunks must be strictly ascending: {pc}")
+        # store what was validated (int-normalized; floats would otherwise
+        # leak into shape math and kernel-cache keys)
+        object.__setattr__(self, "prefill_chunks", pc)
 
 
 @dataclasses.dataclass
@@ -76,6 +99,7 @@ class EngineStats:
     tokens_generated: int = 0
     migrations: int = 0                   # host-side table permutations only
     peak_blocks_used: int = 0             # pool occupancy high-water mark
+    peak_dense_slots_used: int = 0        # dense slot high-water mark
 
 
 class ServingEngine:
@@ -106,10 +130,14 @@ class ServingEngine:
         self.paged = PagedKV(n_blocks=n_blocks,
                              block_pos_stride=ec.block_pos_stride)
         self._table_width = blocks_per_seq
-        # chunk ladder, ascending, capped by s_max (an L=1 chunk would just
-        # be a slower decode step, so it is dropped too)
-        self._chunks = tuple(sorted({int(c) for c in ec.prefill_chunks
-                                     if 2 <= c <= ec.s_max}))
+        # the per-layer state contract: which layers page KV, which carry
+        # dense per-slot state — every shape, operand and lifecycle rule
+        # below derives from it
+        self.state_specs = layer_state_specs(
+            cfg, plan, stride=ec.block_pos_stride)
+        # chunk ladder (validated ascending/>=2 by EngineConfig), capped by
+        # s_max: oversized entries are geometry, not user error
+        self._chunks = tuple(c for c in ec.prefill_chunks if c <= ec.s_max)
 
         # shared lowering metadata: body/specs are batch-polymorphic, only
         # the compiled executables are per-bucket
@@ -129,24 +157,26 @@ class ServingEngine:
             else pctx.data_axes[0]
         self._vec_sharding = NamedSharding(mesh, P(lead))
         self._table_sharding = NamedSharding(mesh, P(lead, None))
-        self._cpspecs = paged_cache_pspecs(cfg)
 
         layout = block_layout(cfg, plan, block_pos_stride=ec.block_pos_stride,
                               mode="paged")
         self.pool = BlockPool(n_blocks, ec.block_pos_stride, layout=layout)
-        self.scheduler = Scheduler(self.pool, SchedulerConfig(ec.buckets))
+        # the device state arena + dense slot lifecycle live in the store;
+        # ONE allocation for the engine's lifetime, donated through every
+        # enqueue.  Pages are never zeroed (stale KV past a slot's position
+        # is causally masked in-kernel); dense slots ARE zeroed or
+        # snapshot-restored at admission — recurrent state has no mask.
+        self.store = StateStore(
+            mesh, self.state_specs, n_blocks=n_blocks,
+            n_slots=ec.n_dense_slots or ec.buckets[-1],
+            stride=ec.block_pos_stride)
+        self.scheduler = Scheduler(self.pool, SchedulerConfig(ec.buckets),
+                                   state=self.store)
 
         self.queue = CommandQueue(mesh)
         # executable cache keyed by (bucket, L): L=0 is the one-position
         # decode step, L>0 a chunked-prefill executable from the ladder
         self._kernels: Dict[Tuple[int, int], HybridKernel] = {}
-        # ONE paged arena for the engine's whole lifetime, donated through
-        # every enqueue; pages are never zeroed (stale KV past a slot's
-        # position is causally masked in-kernel)
-        self._arena = jax.tree.map(
-            lambda sd, sp: jax.device_put(
-                jnp.zeros(sd.shape, sd.dtype), NamedSharding(self.mesh, sp)),
-            paged_cache_specs(cfg, plan, self.paged), self._cpspecs)
         self._bucket: Optional[int] = None
         self._rngs: Dict[str, np.random.Generator] = {}
         self.stats = EngineStats()
@@ -162,7 +192,11 @@ class ServingEngine:
         """Submit a fork of ``parent`` (same prompt, e.g. n>1 sampling).
         Once the parent's prefill has published its full prompt pages, the
         fork's block table adopts them — the prompt KV is physically shared
-        in the arena, not recomputed per sibling."""
+        in the arena, not recomputed per sibling.  Dense (SSM) state is NOT
+        ref-countable: at admission the fork's slot receives a physical
+        *copy* of the parent's published boundary snapshot instead, so
+        hybrid forks share prompt KV pages while owning their own
+        recurrent state."""
         return self._submit(parent.fork(sampling))
 
     def _submit(self, req: Request) -> Request:
@@ -173,10 +207,12 @@ class ServingEngine:
                 f"prompt ({len(req.prompt)}) + max_tokens "
                 f"({req.sampling.max_tokens}) exceeds s_max={ec.s_max}")
         # the request must fit the pool at its FULL grown length (plus the
-        # one-token lookahead the scheduler reserves), or decode would hit an
-        # unpreemptable dead end mid-flight
+        # one-token lookahead the scheduler reserves), or decode would hit
+        # an unpreemptable dead end mid-flight.  Page-free (dense-only)
+        # sequences have O(1) footprint: nothing to check.
         worst = min(len(req.prompt) + req.sampling.max_tokens, ec.s_max)
-        if self.pool.blocks_for(worst) > self.pool.n_blocks:
+        if self.store.needs_pages and \
+                self.pool.blocks_for(worst) > self.pool.n_blocks:
             raise ValueError(
                 f"sequence needs up to {self.pool.blocks_for(worst)} KV "
                 f"blocks but the pool holds {self.pool.n_blocks}")
@@ -233,6 +269,19 @@ class ServingEngine:
                 return c
         return self._chunks[0]
 
+    def _fed_count(self, r: Request, chunk: int) -> int:
+        """Positions slot ``r`` consumes this chunk launch.  Dense-state
+        configs clamp prefill to LAND on the request's snapshot boundary
+        (the last full-page boundary inside the prompt) so the dense leaves
+        there are observable on device for prefix publication — at most one
+        extra launch per prompt, preserving O(prompt / L) ingestion."""
+        n = min(r.remaining_known, chunk)
+        if self.store.has_dense:
+            m0 = self.store.snapshot_boundary(r)
+            if r.num_cached < m0:
+                n = min(n, m0 - r.num_cached)
+        return n
+
     def step(self) -> bool:
         """Schedule + enqueue one step kernel; returns False when idle.
 
@@ -240,7 +289,9 @@ class ServingEngine:
         every slot by one position, or — whenever some slot still has a
         prompt backlog — a ``prefill_bs{N}_len{L}`` advancing slot s by
         ``min(remaining[s], L)`` positions (decode slots ride along with
-        one valid position)."""
+        one valid position).  The trailing operands derive from the
+        per-layer StateSpecs: a block table when any layer pages KV, a
+        dense slot-id vector when any layer carries O(1) state."""
         sd = self.scheduler.schedule()
         if sd is None:
             return False
@@ -248,7 +299,10 @@ class ServingEngine:
         B = sd.bucket
         chunk = self._chunk_len(sd.max_remaining)
         pos = np.zeros((B,), np.int32)
+        has_pages = self.store.needs_pages
+        has_dense = self.store.has_dense
         table = np.full((B, self._table_width), -1, np.int32)
+        slots = np.full((B,), -1, np.int32)
         fed = [0] * B
         dev = lambda a: jax.device_put(jnp.asarray(a), self._vec_sharding)
         dev2 = lambda a: jax.device_put(jnp.asarray(a), self._table_sharding)
@@ -258,31 +312,44 @@ class ServingEngine:
                 if r is not None:
                     tokens[s] = r.next_token
                     pos[s] = r.num_cached
-                    table[s, :len(r.blocks.ids)] = r.blocks.ids
+                    if has_pages:
+                        table[s, :len(r.blocks.ids)] = r.blocks.ids
+                    if has_dense:
+                        slots[s] = r.dense_slot
                     fed[s] = 1
-            logits, self._arena = self.queue.enqueue(
-                self._kernel(B), self.params, self._arena,
-                dev(tokens), dev(pos), dev2(table))
+            ops = ([dev2(table)] if has_pages else []) \
+                + ([dev(slots)] if has_dense else [])
+            logits, self.store.arena = self.queue.enqueue(
+                self._kernel(B), self.params, self.store.arena,
+                dev(tokens), dev(pos), *ops)
         else:
             tokens = np.zeros((B, chunk), np.int32)
             n_valid = np.zeros((B,), np.int32)
             for s, r in enumerate(sd.slots):
                 if r is None:
                     continue
-                n = min(sd.remaining[s], chunk)
+                n = self._fed_count(r, chunk)
                 seq = r.seq_tokens
                 tokens[s, :n] = seq[r.num_cached:r.num_cached + n]
                 pos[s] = r.num_cached
                 n_valid[s] = n
-                table[s, :len(r.blocks.ids)] = r.blocks.ids
+                if has_pages:
+                    table[s, :len(r.blocks.ids)] = r.blocks.ids
+                if has_dense:
+                    slots[s] = r.dense_slot
                 fed[s] = n
-            logits, self._arena = self.queue.enqueue(
-                self._chunk_kernel(B, chunk), self.params, self._arena,
-                dev2(tokens), dev(pos), dev(n_valid), dev2(table))
+            ops = ([dev2(table)] if has_pages else []) \
+                + ([dev(slots)] if has_dense else [])
+            logits, self.store.arena = self.queue.enqueue(
+                self._chunk_kernel(B, chunk), self.params, self.store.arena,
+                dev2(tokens), dev(pos), dev(n_valid), *ops)
             self.stats.prefill_chunk_launches += 1
         self.stats.steps += 1
         self.stats.peak_blocks_used = max(self.stats.peak_blocks_used,
                                           self.pool.n_used)
+        if self.store.slot_pool is not None:
+            self.stats.peak_dense_slots_used = max(
+                self.stats.peak_dense_slots_used, self.store.slot_pool.n_used)
         if sd.is_prefill:
             self.stats.prefill_launches += 1
         else:
@@ -304,6 +371,7 @@ class ServingEngine:
                 0, min(prev_cached + n, len(r.prompt)) - prev_cached)
             r.num_cached += n
             self._publish_filled_pages(r, prev_cached, r.num_cached)
+            self._maybe_publish_dense(r)
             if not will_sample:
                 continue
             tok = self._sample(r, rows[s])
@@ -336,12 +404,28 @@ class ServingEngine:
         """Publish every page the launch completed in (old_nc, new_nc] that
         covers prompt tokens only, so identical prompts (and forks) can
         adopt it — one chunked launch may fill several pages at once."""
+        if not self.store.needs_pages:
+            return
         stride = self.pool.block_pos_stride
         for t in range(old_nc // stride + 1, new_nc // stride + 1):
             end = t * stride
             if end <= len(r.prompt):
                 self.pool.publish_prefix(tuple(r.prompt[:end]),
                                          r.blocks.ids[t - 1])
+
+    def _maybe_publish_dense(self, r: Request) -> None:
+        """Dense analogue of page publication: when a prefill launch lands
+        exactly on the request's snapshot boundary (prefill chunks are
+        clamped to guarantee it), snapshot the dense leaves there keyed by
+        the consumed prompt prefix — identical prompts and ``fork()``
+        siblings then *copy* that state at admission (dense state shares by
+        physical copy, never by ref-count)."""
+        if not self.store.has_dense:
+            return
+        m0 = self.store.snapshot_boundary(r)
+        if 0 < m0 == r.num_cached:
+            self.store.publish_dense_prefix(tuple(r.prompt[:m0]),
+                                            r.dense_slot)
 
     def _sample(self, req: Request, row: np.ndarray) -> int:
         t = req.sampling.temperature
@@ -403,6 +487,11 @@ class ServingEngine:
     # -- observability -----------------------------------------------------
 
     @property
+    def _arena(self):
+        """The device state arena (owned by the StateStore)."""
+        return self.store.arena
+
+    @property
     def prefill_chunk_ladder(self) -> Tuple[int, ...]:
         """Effective chunked-prefill lengths (config ladder capped by s_max,
         ascending; empty = token-stepped prefill)."""
@@ -423,7 +512,11 @@ class ServingEngine:
         return self.stats.tokens_generated / max(t1 - t0, 1e-9)
 
     def peak_kv_bytes(self) -> int:
-        """Peak resident KV bytes (pool occupancy x per-page footprint)."""
+        """Peak resident state bytes: pool occupancy x per-page footprint
+        plus dense slot occupancy x per-slot footprint (both priced by the
+        StateSpec list; either term is zero when that state kind is
+        absent)."""
         layout = self.pool.layout
         per = layout.bytes_per_block if layout is not None else 0
-        return self.stats.peak_blocks_used * per
+        dense = self.stats.peak_dense_slots_used * self.store.dense_slot_bytes
+        return self.stats.peak_blocks_used * per + dense

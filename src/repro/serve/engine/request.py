@@ -76,6 +76,12 @@ class Request:
         self.num_cached = 0
         self.slot: Optional[int] = None      # batch slot while scheduled
         self.blocks = None                   # SequenceBlocks while scheduled
+        # dense-state (DenseSpec) bookkeeping: the arena slot holding this
+        # sequence's O(1) recurrent state while scheduled, and — for
+        # replay-free preemption restore on page-free (ssm-family) configs —
+        # a host snapshot ``(position, leaves)`` of that state at eviction
+        self.dense_slot: Optional[int] = None
+        self.dense_snapshot = None
         self.finish_reason: Optional[str] = None
         self.n_preemptions = 0
         # perf_counter stamps for time-to-first-token (0.0 = not yet)

@@ -16,8 +16,19 @@ Policy (vLLM-style, adapted to the one-executable-per-bucket constraint):
     preempted (blocks released, recompute on re-admission) until the oldest
     make progress — guaranteeing liveness while any single sequence fits.
 
+Every lifecycle event additionally routes through a per-layer **state
+hook** (``engine/state_store.py``), the StateSpec-driven side of the
+contract: admission allocates a dense state slot alongside the pages and
+may fast-forward to a snapshot-backed resume position
+(``plan_resume``/``commit_admit``), retirement and preemption release the
+slot (``on_release``, snapshotting first when that makes the restore
+replay-free), and configs with no paged layers skip page accounting
+entirely.  Attention-only engines plug in the no-op
+:class:`~repro.serve.engine.state_store.NullStateHook` and behave exactly
+as before.
+
 The scheduler is pure host logic over :mod:`request` and
-:mod:`block_cache`; the engine owns devices.
+:mod:`block_cache`; the engine owns devices (the hook is its proxy).
 """
 
 from __future__ import annotations
@@ -93,9 +104,12 @@ class ScheduledStep:
 
 class Scheduler:
     def __init__(self, pool: BlockPool,
-                 config: Optional[SchedulerConfig] = None):
+                 config: Optional[SchedulerConfig] = None,
+                 state=None):
+        from repro.serve.engine.state_store import NullStateHook
         self.pool = pool
         self.config = config or SchedulerConfig()
+        self.state = state if state is not None else NullStateHook()
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []     # admission order (oldest first)
         self._bucket: Optional[int] = None
@@ -135,6 +149,7 @@ class Scheduler:
 
     def _retire(self, request: Request) -> None:
         self.running.remove(request)
+        self.state.on_release(request, preempting=False)
         if request.blocks is not None:
             request.blocks.release_all()
             request.blocks = None
@@ -146,6 +161,9 @@ class Scheduler:
             if victim is keep:
                 continue
             self.running.remove(victim)
+            # snapshot-before-release: the hook may capture the victim's
+            # dense leaves (replay-free restore) while num_cached is intact
+            self.state.on_release(victim, preempting=True)
             victim.blocks.release_all()
             victim.blocks = None
             victim.preempt()
@@ -154,21 +172,22 @@ class Scheduler:
             return victim
         return None
 
-    def _peek_shared_prefix(self, request: Request) -> Tuple[int, int]:
-        """(adoptable pages, of which revivals off the free list) for the
-    longest published full-prompt-page run — a pure read, so a blocked
-    admission can be costed every schedule() without retain/release churn.
-    Capped strictly before the final prompt token — that token must still
-    be fed to produce the first logits."""
+    def _peek_shared_prefix(self, request: Request) -> Tuple[int, List[bool]]:
+        """(adoptable pages, per-page would-revive flags) for the longest
+    published full-prompt-page run — a pure read, so a blocked admission
+    can be costed every schedule() without retain/release churn.  Capped
+    strictly before the final prompt token — that token must still be fed
+    to produce the first logits."""
         stride = self.pool.block_pos_stride
         prompt = request.prompt
-        n = revive = 0
+        n = 0
+        revive: List[bool] = []
         for t in range((len(prompt) - 1) // stride):
             hit = self.pool.peek_prefix(tuple(prompt[:(t + 1) * stride]))
             if hit is None:
                 break
             n += 1
-            revive += int(hit)
+            revive.append(bool(hit))
         return n, revive
 
     def _shared_prefix_pages(self, request: Request, n: int) -> List[int]:
@@ -182,11 +201,14 @@ class Scheduler:
 
     def schedule(self) -> Optional[ScheduledStep]:
         preempted: List[Request] = []
+        needs_pages = self.state.needs_pages
 
         # 1. guarantee every running request can write its next position,
-        #    oldest first; evict youngest on exhaustion
+        #    oldest first; evict youngest on exhaustion.  Page-free configs
+        #    (pure dense state) have nothing to grow: their per-sequence
+        #    footprint is O(1) by construction.
         for r in list(self.running):
-            if r not in self.running:        # evicted by an older request
+            if not needs_pages or r not in self.running:   # evicted already
                 continue
             while True:
                 try:
@@ -201,32 +223,49 @@ class Scheduler:
                             f"single sequence of {r.num_cached + 1} tokens")
                     preempted.append(victim)
 
-        # 2. FIFO admission into free capacity.  Published full-page prompt
-        #    prefixes are adopted first (shared physical pages, positions
-        #    skipped outright); only the remainder allocates fresh pages.
+        # 2. FIFO admission into free capacity.  The resume position comes
+        #    from pages AND dense state together: published full-page prompt
+        #    prefixes are adopted (shared physical pages, positions skipped
+        #    outright) up to the furthest point the state hook can also back
+        #    with a dense snapshot; only the remainder allocates fresh pages.
         admitted: List[Request] = []
         while self.waiting and len(self.running) < self.config.max_batch:
             head = self.waiting[0]
-            n_shared, n_revive = self._peek_shared_prefix(head)
-            needed = max(
-                0, self.pool.blocks_for(len(head.seq_tokens) + 1) - n_shared)
-            # revived pages come off the free list too: cost them up front
-            if not self.pool.can_alloc(needed + n_revive):
+            stride = self.pool.block_pos_stride
+            if needs_pages:
+                n_peek, revive_flags = self._peek_shared_prefix(head)
+            else:
+                n_peek, revive_flags = 0, []
+            resume = self.state.plan_resume(head, n_peek * stride)
+            n_shared = resume // stride if needs_pages else 0
+            if needs_pages:
+                needed = max(0, self.pool.blocks_for(
+                    len(head.seq_tokens) + 1) - n_shared)
+                # revived pages come off the free list too: cost them up front
+                n_revive = sum(revive_flags[:n_shared])
+            else:
+                needed = n_revive = 0
+            if not self.pool.can_alloc(needed + n_revive) \
+                    or not self.state.can_admit(head):
                 if not self.running:
                     raise RuntimeError(
-                        f"KV pool too small to admit {head.request_id} "
-                        f"({needed} blocks needed, {self.pool.n_blocks} "
-                        "total)")
+                        f"engine capacity too small to admit "
+                        f"{head.request_id} ({needed} KV blocks needed of "
+                        f"{self.pool.n_blocks}; dense slot "
+                        f"available: {self.state.can_admit(head)})")
                 break
             shared = self._shared_prefix_pages(head, n_shared)
             self.waiting.popleft()
             head.blocks = SequenceBlocks(self.pool)
             head.blocks.adopt(shared)
-            head.blocks.ensure(len(head.seq_tokens) + 1)
-            if shared:
-                # the adopted pages' KV is already resident: prefill starts
-                # past them (their positions are never replayed)
-                head.num_cached = len(shared) * self.pool.block_pos_stride
+            if needs_pages:
+                head.blocks.ensure(len(head.seq_tokens) + 1)
+            # bind the dense slot (zero-fill or physical snapshot copy)
+            self.state.commit_admit(head, resume)
+            if resume > 0:
+                # the resumed positions' state is already resident (adopted
+                # pages and/or restored dense leaves): never replayed
+                head.num_cached = resume
             head.transition(RequestState.PREFILL)
             self.running.append(head)
             admitted.append(head)

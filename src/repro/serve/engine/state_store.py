@@ -1,0 +1,250 @@
+"""Device-resident engine state, driven by the per-layer StateSpec list.
+
+The store owns the ONE bucket-independent state arena the step kernels
+consume (paged K/V leaves + dense slot leaves, ``repro.serve.state``) and
+every host-side lifecycle operation on it:
+
+  * **admission**   — allocate a dense slot; zero it (fresh sequence) or
+    physically copy a snapshot into it (prefix adoption, ``fork()``,
+    preemption restore).  Pages are the scheduler/pool's job — the store
+    only decides how far admission may fast-forward (``plan_resume``).
+  * **prefix snapshots** — when a prefill launch lands exactly on the
+    request's snapshot boundary (the last full-page boundary strictly
+    inside its prompt), the engine publishes the dense leaves at that
+    position keyed by the consumed token prefix.  This is the dense
+    analogue of ``BlockPool.publish_prefix`` — except dense state is NOT
+    ref-countable, so adoption *copies* the snapshot into the adopter's
+    slot instead of bumping a refcount.
+  * **preemption**  — on page-free (ssm-family) configs the victim's dense
+    leaves are snapshotted onto the request for replay-free restore; on
+    hybrid configs the snapshot is dropped (the attention KV is gone, so a
+    consistent resume point must come from the prefix maps or position 0).
+
+The scheduler routes every lifecycle event through the hook face of this
+class (``needs_pages`` / ``plan_resume`` / ``can_admit`` / ``commit_admit``
+/ ``on_release``); attention-only engines get the same interface with the
+dense machinery compiled out (:class:`NullStateHook` semantics).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.serve.engine.block_cache import DenseSlotPool
+from repro.serve.state import DenseSpec, ModelStateSpecs
+
+
+class StateStore:
+    """One engine's resident device state + its lifecycle operations."""
+
+    def __init__(self, mesh, specs: ModelStateSpecs, *, n_blocks: int,
+                 n_slots: int, stride: int, max_prefix_snapshots: int = 64):
+        self.mesh = mesh
+        self.specs = specs
+        self.stride = stride
+        self.cpspecs = specs.arena_pspecs()
+        self._shardings = jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), self.cpspecs)
+        # ONE arena for the engine's whole lifetime, donated through every
+        # enqueue AND every host-side slot update below
+        self.arena = jax.tree.map(
+            lambda sd, sh: jax.device_put(jnp.zeros(sd.shape, sd.dtype), sh),
+            specs.arena_specs(n_blocks, n_slots if specs.has_dense else 1),
+            self._shardings)
+        self.slot_pool: Optional[DenseSlotPool] = DenseSlotPool(
+            n_slots, slot_bytes=specs.dense_slot_bytes()) \
+            if specs.has_dense else None
+        self._dense_idx: List[int] = [
+            i for i, e in enumerate(specs.entries)
+            if isinstance(e, DenseSpec)]
+        # prefix-token tuple -> host dense leaves at that position (FIFO cap:
+        # the map must not grow with the number of distinct prompts served)
+        self._prefix: "OrderedDict[Tuple[int, ...], Any]" = OrderedDict()
+        self._max_prefix = max_prefix_snapshots
+        self._zero_fn = self._write_fn = None
+        self.n_restores = 0            # snapshot copies INTO a slot
+        self.n_snapshots = 0           # device reads OUT of a slot
+
+    # -- spec-derived facts -------------------------------------------------
+
+    @property
+    def needs_pages(self) -> bool:
+        return self.specs.has_paged
+
+    @property
+    def has_dense(self) -> bool:
+        return self.specs.has_dense
+
+    @property
+    def dense_slot_bytes(self) -> int:
+        return self.specs.dense_slot_bytes()
+
+    def snapshot_boundary(self, request) -> int:
+        """The position admission can fast-forward a same-prompt sibling to:
+        the last full-page boundary strictly before the final prompt token
+        (that token must still be fed to produce the first logits).  Dense
+        prefill launches are clamped to LAND on this boundary so the device
+        state there is observable for snapshotting."""
+        return (len(request.prompt) - 1) // self.stride * self.stride
+
+    # -- scheduler hook face ------------------------------------------------
+
+    def plan_resume(self, request, page_cap: int) -> int:
+        """Resume position admission may grant ``request`` (pure read).
+
+        ``page_cap`` is the furthest position adoptable KV pages cover
+        (0 when the config has no paged layers).  Attention-only configs
+        take the cap as-is; dense configs additionally require a dense
+        snapshot at *exactly* the resume position — either the request's
+        own preemption snapshot (page-free configs: replay-free restore at
+        an arbitrary position) or a published prefix snapshot at a page
+        boundary both state kinds can satisfy."""
+        if not self.has_dense:
+            return page_cap
+        if request.dense_snapshot is not None and not self.needs_pages:
+            return request.dense_snapshot[0]
+        cap = self.snapshot_boundary(request)
+        if self.needs_pages:
+            cap = min(cap, page_cap)
+        prompt = request.prompt
+        for b in range(cap, 0, -self.stride):
+            if tuple(prompt[:b]) in self._prefix:
+                return b
+        return 0
+
+    def can_admit(self, request) -> bool:
+        return self.slot_pool is None or self.slot_pool.can_alloc()
+
+    def commit_admit(self, request, resume: int) -> None:
+        """Bind a dense slot and make its device rows consistent with
+        ``resume``: a snapshot copy (physical, not ref-counted) when
+        fast-forwarding, a zero-fill when starting from position 0."""
+        if not self.has_dense:
+            return
+        request.dense_slot = self.slot_pool.alloc()
+        snap = None
+        if resume > 0:
+            if request.dense_snapshot is not None \
+                    and request.dense_snapshot[0] == resume:
+                snap = request.dense_snapshot[1]
+            else:
+                snap = self._prefix.get(tuple(request.prompt[:resume]))
+            assert snap is not None, \
+                f"no dense snapshot at resume position {resume}"
+        request.dense_snapshot = None
+        if snap is None:
+            self._zero_slot(request.dense_slot)
+        else:
+            self._write_slot(request.dense_slot, snap)
+            self.n_restores += 1
+
+    def on_release(self, request, preempting: bool = False) -> None:
+        """Retire/preempt: free the dense slot — after snapshotting it onto
+        the request when the snapshot alone is a consistent resume point
+        (page-free configs with progress; hybrid preemption drops state
+        because its paged KV is released alongside)."""
+        if not self.has_dense or request.dense_slot is None:
+            return
+        if preempting and not self.needs_pages and request.num_cached > 0:
+            request.dense_snapshot = (request.num_cached,
+                                      self.read_slot(request.dense_slot))
+        self.slot_pool.release(request.dense_slot)
+        request.dense_slot = None
+
+    # -- dense prefix snapshots (engine-side) -------------------------------
+
+    def publish_dense_prefix(self, key: Tuple[int, ...], slot: int) -> None:
+        key = tuple(key)
+        self._prefix[key] = self.read_slot(slot)
+        self._prefix.move_to_end(key)
+        while len(self._prefix) > self._max_prefix:
+            self._prefix.popitem(last=False)
+
+    def has_dense_prefix(self, key: Tuple[int, ...]) -> bool:
+        return tuple(key) in self._prefix
+
+    # -- device slot ops ----------------------------------------------------
+    #
+    # The arena is donated through these exactly like through a step
+    # enqueue; each op compiles once (the slot id is a traced scalar).
+
+    def _dense_leaves(self, arena) -> Dict[Tuple[int, str], Any]:
+        return {(i, name): arena[i][name]
+                for i in self._dense_idx for name in arena[i]}
+
+    def _zero_slot(self, slot: int) -> None:
+        if self._zero_fn is None:
+            didx = set(self._dense_idx)
+
+            def zero(arena, s):
+                return [
+                    {name: leaf.at[:, :, s].set(jnp.zeros((), leaf.dtype))
+                     if i in didx else leaf
+                     for name, leaf in entry.items()}
+                    for i, entry in enumerate(arena)]
+
+            self._zero_fn = jax.jit(zero, donate_argnums=(0,),
+                                    out_shardings=self._shardings)
+        self.arena = self._zero_fn(self.arena, jnp.int32(slot))
+
+    def _write_slot(self, slot: int, host_leaves: Dict) -> None:
+        if self._write_fn is None:
+            didx = self._dense_idx
+            q = self.specs.q
+
+            def write(arena, s, rows):
+                out = [dict(entry) for entry in arena]
+                for i in didx:
+                    for name in out[i]:
+                        # snapshots hold ONE grid row; restore replicates it
+                        # across the q rows (gemv dense state is
+                        # row-replicated by construction)
+                        row = rows[(i, name)]
+                        full = jnp.tile(row, (1, q) + (1,) * (row.ndim - 2))
+                        out[i][name] = out[i][name].at[:, :, s].set(full)
+                return out
+
+            self._write_fn = jax.jit(write, donate_argnums=(0,),
+                                     out_shardings=self._shardings)
+        rows = {k: jnp.asarray(v) for k, v in host_leaves.items()}
+        self.arena = self._write_fn(self.arena, jnp.int32(slot), rows)
+
+    def read_slot(self, slot: int) -> Dict[Tuple[int, str], np.ndarray]:
+        """Pull one dense slot to host (blocks on in-flight work).
+
+        Dense state is computed redundantly on every grid row in the gemv
+        serving layout, so only grid row 0 (PE indices [0, r): its r column
+        shards) crosses the device boundary — a q-fold smaller transfer;
+        :meth:`_write_slot` re-replicates on restore."""
+        self.n_snapshots += 1
+        r = self.specs.r
+        return {k: np.asarray(leaf[:, :r, slot])
+                for k, leaf in self._dense_leaves(self.arena).items()}
+
+
+class NullStateHook:
+    """Hook face for engines with no dense-state layers: pages are the
+    whole story, so every dense lifecycle event is a no-op and admission
+    resumes exactly as far as adoptable pages reach."""
+
+    needs_pages = True
+    has_dense = False
+
+    def plan_resume(self, request, page_cap: int) -> int:
+        return page_cap
+
+    def can_admit(self, request) -> bool:
+        return True
+
+    def commit_admit(self, request, resume: int) -> None:
+        pass
+
+    def on_release(self, request, preempting: bool = False) -> None:
+        pass

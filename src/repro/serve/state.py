@@ -1,0 +1,254 @@
+"""Per-layer StateSpec ABI: the engine <-> kernel state contract.
+
+The paper's lesson is that the memory abstraction must match the
+architecture (the symmetric heap vs one-size-fits-all buffers).  The serving
+engine used to hard-code its device state to attention k/v page arenas,
+which made every non-attention mixer unservable.  This module replaces that
+hard-coding with a declarative, typed per-layer descriptor — the single
+source of truth for
+
+  * device **shapes** of the engine's resident state arena,
+  * boundary **pspecs** (everything rides ``P(None, MODEL)``: the arena is
+    batch-bucket-independent by construction),
+  * **operand packing**: which indirection operands a step kernel takes
+    (a block ``table`` when any layer pages KV, a dense ``slots`` vector
+    when any layer carries O(1)-per-sequence state),
+  * **bytes-resident accounting** (per physical page / per dense slot).
+
+Two state kinds cover every mixer the model zoo uses:
+
+  :class:`PagedSpec`  — attention: KV grows with sequence length, so it is
+      split into physical pages addressed through per-slot block tables
+      (sequence identity lives in host tables; pages are position-agnostic).
+
+  :class:`DenseSpec`  — SSM (Mamba2/SSD) and other recurrent mixers: state
+      is O(1) per sequence, so it lives in fixed per-sequence *slots*
+      addressed through a per-lane ``slots`` vector.  Dense state is NOT
+      ref-countable the way pages are — sharing it means physically copying
+      a snapshot (see ``engine/state_store.py``).
+
+``layer_state_specs`` derives one spec per ``ModelConfig.pattern()`` entry,
+so ``dense``, ``moe``, ``ssm`` and ``hybrid`` families all resolve to a
+servable contract; the old ``mixer != "attn"`` rejections are gone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.partition import MODEL
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Attention-mixer state: K/V pages addressed through a block table.
+
+    Shapes are grid-resolved (``kvh`` is the per-PE stored kv-head count):
+    the arena leaf for one layer is
+    ``(G, n_pes, ceil(n_blocks / q), stride, kvh, hd)`` with physical page
+    ``p`` living on grid row ``p % q`` at local index ``p // q``.
+    """
+
+    kvh: int                      # stored kv heads per PE (column share)
+    hd: int                       # head dim
+    stride: int                   # cache positions per physical page
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError("stride must be >= 1")
+
+    @property
+    def leaves(self) -> Mapping[str, Tuple[Tuple[int, ...], Any]]:
+        """name -> (per-page local shape, dtype)."""
+        shape = (self.stride, self.kvh, self.hd)
+        return {"k": (shape, self.dtype), "v": (shape, self.dtype)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec:
+    """Recurrent-mixer state: O(1) per sequence, held in dense slots.
+
+    ``leaves`` maps leaf name -> (per-slot local shape, dtype); for Mamba2
+    that is ``conv`` (the (k-1)-step pre-activation window) and ``ssm``
+    (the (H, N, P) SSD state, fp32).  The arena leaf for one layer is
+    ``(G, n_pes, n_slots) + shape`` — slot rows are row-replicated (every
+    grid row computes the recurrence redundantly in the gemv layout) and
+    column-sharded through the per-leaf channel/head dims.
+    """
+
+    leaves: Tuple[Tuple[str, Tuple[int, ...], Any], ...]
+
+    def leaf_dict(self) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+        return {name: (shape, dt) for name, shape, dt in self.leaves}
+
+
+StateSpec = Union[PagedSpec, DenseSpec]
+
+
+def _mamba_dense_spec(cfg, r: int) -> DenseSpec:
+    conv_ch = (cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) // r
+    h_loc = cfg.ssm_heads // r
+    return DenseSpec(leaves=(
+        ("conv", (cfg.conv_kernel - 1, conv_ch), cfg.compute_dtype),
+        ("ssm", (h_loc, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+    ))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelStateSpecs:
+    """The per-layer state contract of one model on one mesh plan."""
+
+    entries: Tuple[StateSpec, ...]     # one per pattern position
+    groups: int                        # scan groups (leading arena dim)
+    q: int                             # grid rows (page id space shards)
+    r: int                             # grid cols (head/channel shards)
+
+    @property
+    def n_pes(self) -> int:
+        return self.q * self.r
+
+    @property
+    def has_paged(self) -> bool:
+        return any(isinstance(e, PagedSpec) for e in self.entries)
+
+    @property
+    def has_dense(self) -> bool:
+        return any(isinstance(e, DenseSpec) for e in self.entries)
+
+    @property
+    def stride(self) -> int:
+        for e in self.entries:
+            if isinstance(e, PagedSpec):
+                return e.stride
+        raise ValueError("no paged layer: stride is undefined")
+
+    # -- shapes / pspecs ----------------------------------------------------
+
+    def blocks_local(self, n_blocks: int) -> int:
+        return -(-n_blocks // self.q)
+
+    def arena_specs(self, n_blocks: int, n_slots: int) -> List[Dict]:
+        """ShapeDtypeStruct pytree of the engine's whole resident state."""
+        out: List[Dict] = []
+        lead = (self.groups, self.n_pes)
+        for e in self.entries:
+            if isinstance(e, PagedSpec):
+                shape = lead + (self.blocks_local(n_blocks),) \
+                    + next(iter(e.leaves.values()))[0]
+                out.append({name: jax.ShapeDtypeStruct(shape, dt)
+                            for name, (_, dt) in e.leaves.items()})
+            else:
+                out.append({name: jax.ShapeDtypeStruct(
+                    lead + (n_slots,) + shape, dt)
+                    for name, shape, dt in e.leaves})
+        return out
+
+    def arena_pspecs(self) -> List[Dict]:
+        """Boundary specs: every leaf rides ``P(None, MODEL)`` — pages AND
+        dense slots shard only inside the flat MODEL axis (dim 1), never
+        over batch, so the arena is bucket-independent."""
+        out: List[Dict] = []
+        for e in self.entries:
+            if isinstance(e, PagedSpec):
+                out.append({name: P(None, MODEL) for name in e.leaves})
+            else:
+                out.append({name: P(None, MODEL) for name, _, _ in e.leaves})
+        return out
+
+    # -- operand packing ----------------------------------------------------
+
+    def step_operands(self) -> Tuple[str, ...]:
+        """Trailing kernel operands after (params, state, tokens, pos
+        [, n_valid]): the ABI every ``serve_step_bs{N}`` /
+        ``prefill_bs{N}_len{L}`` executable derives from the spec list."""
+        ops: List[str] = []
+        if self.has_paged:
+            ops.append("table")      # (B, s_max // stride) physical page ids
+        if self.has_dense:
+            ops.append("slots")      # (B,) dense slot ids, -1 = idle lane
+        return tuple(ops)
+
+    def operand_pspecs(self, lead) -> Tuple[Any, ...]:
+        specs = []
+        if self.has_paged:
+            specs.append(P(lead, None))
+        if self.has_dense:
+            specs.append(P(lead))
+        return tuple(specs)
+
+    # -- bytes-resident accounting ------------------------------------------
+
+    def page_bytes(self) -> int:
+        """Device bytes of ONE physical page across all paged layers (a page
+        lives on one grid row, replicated/sharded across its r columns)."""
+        total = 0
+        for e in self.entries:
+            if not isinstance(e, PagedSpec):
+                continue
+            for shape, dt in e.leaves.values():
+                total += self.groups * self.r * int(np.prod(shape)) \
+                    * np.dtype(dt).itemsize
+        return total
+
+    def dense_slot_bytes(self) -> int:
+        """Device bytes of ONE dense slot across all dense layers (slot rows
+        are replicated over the q grid rows in the gemv serving layout)."""
+        total = 0
+        for e in self.entries:
+            if not isinstance(e, DenseSpec):
+                continue
+            for _, shape, dt in e.leaves:
+                total += self.groups * self.n_pes * int(np.prod(shape)) \
+                    * np.dtype(dt).itemsize
+        return total
+
+
+def pattern_pspecs(cfg) -> List[Dict[str, Any]]:
+    """Arena boundary pspecs from the layer pattern alone (geometry-free:
+    every leaf is ``P(None, MODEL)``; only the leaf NAMES depend on the
+    mixer).  Raises on mixers with no StateSpec mapping — never guesses."""
+    leaf_names = {"attn": ("k", "v"), "mamba": ("conv", "ssm"),
+                  "ssm": ("conv", "ssm")}
+    entries = []
+    for (mixer, _) in cfg.pattern():
+        names = leaf_names.get(mixer)
+        if names is None:
+            raise NotImplementedError(
+                f"no StateSpec mapping for mixer {mixer!r}")
+        entries.append({name: P(None, MODEL) for name in names})
+    return entries
+
+
+def layer_state_specs(cfg, plan, *, stride: int) -> ModelStateSpecs:
+    """Derive the per-layer state contract from ``ModelConfig.pattern()``.
+
+    Every mixer maps to a spec — there is no rejected architecture family
+    left: ``attn`` -> :class:`PagedSpec`, ``mamba``/``ssm`` ->
+    :class:`DenseSpec`.  Encoder-decoder cross caches are the one remaining
+    gap (they are per-request dense *and* sequence-shaped).
+    """
+    q, r = plan.grid_q, plan.grid_r
+    if cfg.enc_layers:
+        raise NotImplementedError(
+            "engine state specs: encoder cross caches are not paged or "
+            "O(1)-dense; serve encdec models through the fixed-batch path")
+    entries: List[StateSpec] = []
+    for (mixer, _) in cfg.pattern():
+        if mixer == "attn":
+            entries.append(PagedSpec(kvh=cfg.kv_stored(r)[0] // r,
+                                     hd=cfg.hd(), stride=stride,
+                                     dtype=cfg.compute_dtype))
+        elif mixer in ("mamba", "ssm"):
+            entries.append(_mamba_dense_spec(cfg, r))
+        else:
+            raise NotImplementedError(
+                f"no StateSpec mapping for mixer {mixer!r}")
+    return ModelStateSpecs(entries=tuple(entries), groups=cfg.n_groups(),
+                           q=q, r=r)

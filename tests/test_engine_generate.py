@@ -254,6 +254,24 @@ def test_rngs_are_dropped_on_finish_and_cancel(mesh16, plan16):
     assert eng._rngs == {}
 
 
+def test_engine_config_rejects_bad_prefill_chunks():
+    """Regression for silent ladder drops: entries < 2 or out-of-order
+    ladders used to be silently discarded by the s_max cap; they are user
+    errors and must raise."""
+    with pytest.raises(ValueError, match="must be >= 2"):
+        EngineConfig(prefill_chunks=(1, 16))
+    with pytest.raises(ValueError, match="must be >= 2"):
+        EngineConfig(prefill_chunks=(0,))
+    with pytest.raises(ValueError, match="ascending"):
+        EngineConfig(prefill_chunks=(64, 16))
+    with pytest.raises(ValueError, match="ascending"):
+        EngineConfig(prefill_chunks=(16, 16, 64))
+    # legal ladders: strictly ascending >= 2; () disables chunking; entries
+    # above s_max remain legal (they are capped by geometry, not rejected)
+    assert EngineConfig(prefill_chunks=()).prefill_chunks == ()
+    assert EngineConfig(s_max=32, prefill_chunks=(16, 64, 256)) is not None
+
+
 def test_submit_validation(mesh16, plan16):
     ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4)
     eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)

@@ -1,0 +1,324 @@
+"""Per-layer StateSpec ABI: one engine state contract for paged-KV attention
+AND dense SSM state.
+
+The load-bearing assertions, per the acceptance criteria:
+
+  * an ``ssm``-family config (the reduced mamba2-780m) and a small
+    ``hybrid``-family config generate through ``ServingEngine`` with greedy
+    outputs matching the single-shot reference decode — token-stepped AND
+    chunked;
+  * attention-only configs produce bit-identical logits to the
+    pre-refactor paged path (same body, same operands: the StateSpec layer
+    must be invisible to attention-only serving);
+  * ``fork()`` on a hybrid config physically copies dense state (distinct
+    slots, a snapshot restore) while still sharing prompt KV pages (peak
+    pool occupancy strictly under 2x solo).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.registry import reduced
+from repro.models import params as pm
+from repro.models.config import ModelConfig
+from repro.partition import DATA, MeshPlan, MODEL
+from repro.serve.decode import (PagedKV, cache_pspecs, cache_specs,
+                                make_decode_step, paged_cache_pspecs,
+                                paged_cache_specs)
+from repro.serve.engine import (DenseSlotPool, EngineConfig, PoolExhausted,
+                                SamplingParams, build_engine, generate)
+from repro.serve.state import (DenseSpec, PagedSpec, layer_state_specs)
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32,
+           attn_block_kv=32)
+HYBRID = ModelConfig(
+    name="hyb", family="hybrid", d_model=64, n_layers=2, n_heads=8,
+    n_kv_heads=4, d_ff=128, vocab_size=128, d_inner=128, ssm_heads=8,
+    ssm_headdim=16, ssm_state=16, ssm_groups=4,
+    layer_pattern=(("attn", "mlp"), ("mamba", "mlp")), sub_quadratic=True,
+    **F32)
+ATTN = ModelConfig(name="att", family="dense", d_model=64, n_layers=2,
+                   n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128, **F32)
+S_MAX = 32
+
+
+def _ssm_cfg():
+    """The reduced (smoke) sibling of the assigned mamba2-780m config."""
+    return reduced(get_config("mamba2-780m"))
+
+
+def _single_shot_greedy(cfg, mesh, plan, prompts, n_tok):
+    """The pre-existing fixed-batch gemv decode loop (the oracle-backed
+    reference path; supports attn AND mamba mixers)."""
+    B, plen = prompts.shape
+    step, specs, pctx = make_decode_step(cfg, mesh, plan, batch=B,
+                                         s_max=S_MAX, mode="gemv")
+    params = pm.init_params(specs, seed=0)
+    pspecs = pm.param_pspecs(specs)
+    params_d = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        params, pspecs)
+    cs = cache_specs(cfg, plan, B, S_MAX, "gemv")
+    cps = cache_pspecs(cfg, "gemv", pctx.data_axes)
+    cache = jax.tree.map(
+        lambda sd, sp: jax.device_put(jnp.zeros(sd.shape, sd.dtype),
+                                      NamedSharding(mesh, sp)), cs, cps)
+    out = [[] for _ in range(B)]
+    tok = prompts[:, 0]
+    for t in range(plen + n_tok - 1):
+        logits, cache = step(params_d, cache,
+                             jax.device_put(jnp.asarray(tok),
+                                            NamedSharding(mesh, P(DATA))),
+                             jnp.int32(t))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :cfg.vocab_size], -1))
+        if t + 1 < plen:
+            tok = prompts[:, t + 1]
+        else:
+            tok = nxt.astype(np.int32)
+            for b in range(B):
+                out[b].append(int(nxt[b]))
+    return out, params_d
+
+
+@pytest.fixture(scope="module", params=["ssm", "hybrid"])
+def family_ref(request, mesh16, plan16):
+    """(cfg, prompts, expected greedy tokens, device params) per family."""
+    cfg = _ssm_cfg() if request.param == "ssm" else HYBRID
+    B, plen, n_tok = 4, 9, 5
+    prompts = np.random.default_rng(11).integers(
+        0, cfg.vocab_size, size=(B, plen)).astype(np.int32)
+    expect, params_d = _single_shot_greedy(cfg, mesh16, plan16, prompts,
+                                           n_tok)
+    return cfg, prompts, n_tok, expect, params_d
+
+
+@pytest.mark.parametrize("chunks", [(), (4, 16)],
+                         ids=["token-stepped", "chunked"])
+def test_ssm_and_hybrid_generate_match_single_shot(mesh16, plan16,
+                                                   family_ref, chunks):
+    """The acceptance bar: SSM/hybrid configs serve through the engine with
+    greedy outputs equal to the single-shot reference — across per-slot
+    positions, dense slot indirection, mid-prompt snapshot boundaries and
+    chunked multi-token state advance."""
+    cfg, prompts, n_tok, expect, params_d = family_ref
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4,
+                      prefill_chunks=chunks)
+    eng = build_engine(cfg, mesh16, plan16, engine_cfg=ec, params=params_d)
+    outs = generate(eng, [p.tolist() for p in prompts],
+                    SamplingParams(max_tokens=n_tok))
+    for b, c in enumerate(outs):
+        assert c.tokens == expect[b], (cfg.name, b, c.tokens, expect[b])
+        assert c.finish_reason == "length"
+    assert eng.stats.tokens_generated == 4 * n_tok
+    assert eng.stats.peak_dense_slots_used > 0
+    assert eng.peak_kv_bytes() > 0
+    if cfg.family == "ssm":
+        # page-free config: no block-table operand, no page traffic
+        assert not eng.store.needs_pages
+        assert eng.stats.peak_blocks_used == 0
+        assert eng.state_specs.step_operands() == ("slots",)
+    else:
+        assert eng.state_specs.step_operands() == ("table", "slots")
+
+
+def test_attn_only_engine_is_bit_identical_to_prerefactor_paged(mesh16,
+                                                                plan16):
+    """The StateSpec layer must be invisible to attention-only serving:
+    the engine's spec-driven step and the pre-refactor direct paged step
+    (``make_decode_step(paged=...)``, the PR-2 entry point) must produce
+    bit-identical logits and identical operand ABIs on the same inputs."""
+    cfg, B, stride, steps = ATTN, 2, 8, 6
+    T = S_MAX // stride
+    paged = PagedKV(n_blocks=B * T, block_pos_stride=stride)
+    specs_list = layer_state_specs(cfg, plan16, stride=stride)
+    assert specs_list.step_operands() == ("table",)   # ABI unchanged
+    assert not specs_list.has_dense
+
+    step_p, specs, _ = make_decode_step(cfg, mesh16, plan16, batch=B,
+                                        s_max=S_MAX, mode="gemv",
+                                        per_slot=True, paged=paged)
+    params = pm.init_params(specs, seed=0)
+    pspecs = pm.param_pspecs(specs)
+    params_d = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh16, s)),
+        params, pspecs)
+
+    def fresh_arena():
+        return jax.tree.map(
+            lambda sd, sp: jax.device_put(
+                jnp.zeros(sd.shape, sd.dtype), NamedSharding(mesh16, sp)),
+            paged_cache_specs(cfg, plan16, paged), paged_cache_pspecs(cfg))
+
+    ec = EngineConfig(s_max=S_MAX, buckets=(B,), block_pos_stride=stride,
+                      n_kv_blocks=B * T, prefill_chunks=())
+    eng = build_engine(cfg, mesh16, plan16, engine_cfg=ec, params=params_d)
+    kernel = eng._kernel(B)
+
+    arena_a, arena_b = fresh_arena(), fresh_arena()
+    table = np.arange(B * T, dtype=np.int32).reshape(B, T)
+    table_d = jax.device_put(jnp.asarray(table),
+                             NamedSharding(mesh16, P(DATA, None)))
+    toks = np.random.default_rng(2).integers(0, cfg.vocab_size,
+                                             size=(B, steps)).astype(np.int32)
+    for t in range(steps):
+        tok = jax.device_put(jnp.asarray(toks[:, t]),
+                             NamedSharding(mesh16, P(DATA)))
+        pos = jax.device_put(jnp.full((B,), t, jnp.int32),
+                             NamedSharding(mesh16, P(DATA)))
+        la, arena_a = step_p(params_d, arena_a, tok, pos, table_d)
+        lb, arena_b = eng.queue.enqueue(kernel, params_d, arena_b, tok, pos,
+                                        table_d)
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), t
+        eng.queue.finish()     # per-step, as the engine drive loop does
+
+
+def test_hybrid_fork_copies_dense_state_and_shares_prompt_pages(mesh16,
+                                                                plan16):
+    """fork() on a hybrid: prompt KV pages are physically shared (refcount,
+    peak < 2x solo) while dense SSM state is physically COPIED into the
+    fork's own slot via the published boundary snapshot."""
+    stride, plen, n_tok = 4, 9, 6
+    prompt = np.random.default_rng(8).integers(
+        0, HYBRID.vocab_size, size=plen).tolist()
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride,
+                      prefill_chunks=(16,))
+    eng = build_engine(HYBRID, mesh16, plan16, engine_cfg=ec, seed=0)
+    m0 = (plen - 1) // stride * stride
+    parent = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.step()                 # chunked prefill, clamped to land on m0
+    assert parent.num_cached == m0
+    assert eng.store.has_dense_prefix(tuple(prompt[:m0]))
+    eng.step()                 # tail of the prompt: parent samples
+    assert parent.output_tokens
+
+    child = eng.fork(parent)
+    eng.step()
+    # dense state is per-sequence: distinct live slots, restore counted
+    assert child.dense_slot is not None and parent.dense_slot is not None
+    assert child.dense_slot != parent.dense_slot
+    assert eng.store.n_restores == 1
+    assert child.num_cached > m0       # resumed AT m0, already advanced
+    # prompt KV pages are shared: the fork's table starts with the
+    # parent's physical page ids (refcount 2), never re-allocated
+    n_shared = m0 // stride
+    assert child.blocks.ids[:n_shared] == parent.blocks.ids[:n_shared]
+    assert all(eng.pool.refcount(b) == 2
+               for b in child.blocks.ids[:n_shared])
+    eng.drain()
+    assert child.output_tokens == parent.output_tokens
+    solo = eng.pool.blocks_for(plen + n_tok + 1)
+    assert eng.stats.peak_blocks_used <= 2 * solo - n_shared < 2 * solo
+
+
+def test_ssm_preemption_restores_without_replay(mesh16, plan16):
+    """Page-free configs snapshot dense leaves at eviction: re-admission
+    restores the exact state and position — zero replayed tokens, greedy
+    outputs invariant."""
+    cfg = _ssm_cfg()
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=4,
+                      prefill_chunks=(8,))
+    rng = np.random.default_rng(3)
+    p1 = rng.integers(0, cfg.vocab_size, size=5).tolist()
+    p2 = rng.integers(0, cfg.vocab_size, size=5).tolist()
+    eng = build_engine(cfg, mesh16, plan16, engine_cfg=ec, seed=0)
+    base = generate(eng, [p1, p2], SamplingParams(max_tokens=8))
+
+    eng2 = build_engine(cfg, mesh16, plan16, engine_cfg=ec,
+                        params=eng.params)
+    r1 = eng2.submit(p1, SamplingParams(max_tokens=8))
+    r2 = eng2.submit(p2, SamplingParams(max_tokens=8))
+    for _ in range(4):
+        eng2.step()
+    assert r2.output_tokens and not r2.is_finished
+    victim = eng2.scheduler._preempt_one(keep=r1)
+    assert victim is r2
+    pos, leaves = r2.dense_snapshot
+    assert pos == 7 and leaves            # mid-generation snapshot
+    ingested_before = eng2.stats.prompt_tokens_ingested
+    eng2.drain()
+    assert eng2.store.n_restores == 1
+    # replay-free: restoring mid-GENERATION state never re-feeds the prompt
+    assert eng2.stats.prompt_tokens_ingested == ingested_before
+    assert r1.output_tokens == base[0].tokens
+    assert r2.output_tokens == base[1].tokens
+
+
+def test_ssm_identical_prompts_adopt_dense_prefix(mesh16, plan16):
+    """The dense analogue of prefix-page adoption: a second identical
+    prompt resumes at the donor's published snapshot boundary instead of
+    re-ingesting it (and still reproduces the donor's greedy tokens)."""
+    cfg = _ssm_cfg()
+    stride, plen, n_tok = 4, 11, 4
+    prompt = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, size=plen).tolist()
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride,
+                      prefill_chunks=(16,))
+    eng = build_engine(cfg, mesh16, plan16, engine_cfg=ec, seed=0)
+    m0 = (plen - 1) // stride * stride                     # 8
+    a = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.step()
+    assert a.num_cached == m0                              # boundary clamp
+    eng.step()
+    assert a.output_tokens
+    ingested = eng.stats.prompt_tokens_ingested
+    b = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    eng.drain()
+    assert b.output_tokens == a.output_tokens
+    # b resumed at m0: only the prompt tail was ever fed for it
+    assert eng.stats.prompt_tokens_ingested == ingested + (plen - m0)
+    assert eng.store.n_restores == 1
+
+
+# ---------------------------------------------------------------------------
+# Host-only spec units (no mesh).
+# ---------------------------------------------------------------------------
+
+def test_layer_state_specs_cover_every_family(plan16):
+    ssm = layer_state_specs(_ssm_cfg(), plan16, stride=4)
+    assert [type(e) for e in ssm.entries] == [DenseSpec]
+    assert ssm.has_dense and not ssm.has_paged
+    assert ssm.step_operands() == ("slots",)
+    assert ssm.page_bytes() == 0 and ssm.dense_slot_bytes() > 0
+
+    hyb = layer_state_specs(HYBRID, plan16, stride=4)
+    assert [type(e) for e in hyb.entries] == [PagedSpec, DenseSpec]
+    assert hyb.step_operands() == ("table", "slots")
+    assert hyb.stride == 4
+    assert hyb.page_bytes() > 0 and hyb.dense_slot_bytes() > 0
+
+    att = layer_state_specs(ATTN, plan16, stride=4)
+    assert att.step_operands() == ("table",)
+    assert att.dense_slot_bytes() == 0
+
+    jamba = layer_state_specs(reduced(get_config("jamba-1.5-large-398b")),
+                              plan16, stride=4)
+    assert jamba.has_paged and jamba.has_dense     # 1 attn : 7 mamba
+
+
+def test_paged_cache_specs_require_slots_for_dense(plan16):
+    paged = PagedKV(n_blocks=4, block_pos_stride=4)
+    with pytest.raises(ValueError):
+        paged_cache_specs(HYBRID, plan16, paged)             # 0 dense slots
+    entries = paged_cache_specs(HYBRID, plan16, paged, n_dense_slots=2)
+    assert set(entries[0]) == {"k", "v"}
+    assert set(entries[1]) == {"conv", "ssm"}
+    assert entries[1]["conv"].shape[2] == 2                  # n_slots
+    assert entries[1]["ssm"].dtype == jnp.float32
+
+
+def test_dense_slot_pool_alloc_release():
+    pool = DenseSlotPool(2, slot_bytes=64)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1} and pool.n_free == 0 and pool.n_used == 2
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.release(a)
+    assert pool.n_free == 1
+    with pytest.raises(ValueError):
+        pool.release(a)                                      # double free
+    assert pool.alloc() == a

@@ -7,7 +7,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.hybrid import CommandQueue, HybridKernel
 from repro.core.shmem import ShmemGrid
+from repro.models.config import ModelConfig
 from repro.partition import MODEL
+from repro.serve.engine import EngineConfig, SamplingParams, build_engine
 
 GRID = ShmemGrid(MODEL, 4, 4)
 
@@ -51,3 +53,69 @@ def test_enqueue_finish_event_lifecycle(mesh16):
     assert ev.launches == 1
     assert 0.0 < ev.first_enqueue_t <= ev.last_enqueue_t <= ev.last_done_t
     assert ev.active_span_s >= 0.0
+
+
+def test_max_depth_tracks_inflight_high_water(mesh16):
+    """``max_depth`` is the enqueued-but-not-drained high-water mark, not
+    the current occupancy — it must survive the drain."""
+    queue = CommandQueue(mesh16)
+    kern = _add_kernel()
+    a = jnp.ones((16, 8), jnp.float32)
+    queue.enqueue(kern, a, a)
+    queue.enqueue(kern, a, a)
+    queue.enqueue(kern, a, a)
+    assert queue.depth == 3 and queue.max_depth == 3
+    queue.finish()
+    assert queue.depth == 0 and queue.max_depth == 3
+    queue.enqueue(kern, a, a)
+    queue.finish()
+    assert queue.max_depth == 3          # high-water, not last depth
+    assert queue.events["addk"].launches == 4
+
+
+def test_event_accounting_under_mixed_prefill_decode_traffic(mesh16, plan16):
+    """KernelEvent invariants under real mixed engine traffic: staggered
+    submits force prefill chunk launches to interleave with decode-phase
+    slots, and every event record must stay consistent —
+    ``active_span_s`` spans first-enqueue..last-done, launches partition
+    across executables, ``n_executables`` matches the distinct kernels
+    actually used, and the engine's finish()-per-step discipline keeps the
+    queue's high-water depth at exactly 1."""
+    cfg = ModelConfig(name="q", family="dense", d_model=64, n_layers=2,
+                      n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                      attn_block_kv=32)
+    ec = EngineConfig(s_max=32, buckets=(1, 2, 4), block_pos_stride=4,
+                      prefill_chunks=(4, 16))
+    eng = build_engine(cfg, mesh16, plan16, engine_cfg=ec, seed=0)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(5, 12))).tolist()
+               for _ in range(4)]
+    # staggered arrivals: r0 reaches decode while later prompts prefill,
+    # so chunk launches carry mixed n_valid (decode slots ride along)
+    eng.submit(prompts[0], SamplingParams(max_tokens=10))
+    eng.step()
+    eng.step()
+    for p in prompts[1:]:
+        eng.submit(p, SamplingParams(max_tokens=4))
+    eng.drain()
+
+    events = eng.kernel_events()
+    assert events and set(events) == set(eng.queue.events)
+    # mixed traffic really happened: both executable kinds were used
+    assert any(n.startswith("prefill_bs") for n in events)
+    assert any(n.startswith("serve_step_bs") for n in events)
+    # one compiled executable per distinct kernel name, nothing orphaned
+    assert eng.queue.n_executables == len(events)
+    # launches partition exactly across events
+    assert sum(ev.launches for ev in events.values()) == eng.stats.steps
+    for name, ev in events.items():
+        assert ev.launches > 0, name
+        assert 0.0 < ev.first_enqueue_t <= ev.last_enqueue_t, name
+        # the engine finishes every step: each event was drained
+        assert ev.last_done_t >= ev.last_enqueue_t, name
+        assert ev.active_span_s == ev.last_done_t - ev.first_enqueue_t > 0.0
+    # finish()-per-step discipline: never more than one in-flight enqueue
+    assert eng.queue.max_depth == 1
+    assert eng.queue.depth == 0
