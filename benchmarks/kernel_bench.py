@@ -14,7 +14,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssd_scan import ssd_ref, ssd_scan
 from repro.models.attention import chunked_attention
 
@@ -58,6 +61,33 @@ def run(report):
            "parallel chunks + assoc state scan")
     report("ssd_sequential_S2048_us", round(_bench(f_seq, x, dt, A, Bm, Cm), 1),
            "step-by-step recurrence")
+
+    # paged decode: materialized gather (the jnp serving path) vs the fused
+    # kernel's in-place page reads.  The timed entry is the real XLA:CPU
+    # gather+attend path; the fused kernel is priced structurally (bytes of
+    # gathered K/V copy it never materializes — per layer, per launch).
+    B, T, stride, kvh, hd, Hq = 8, 32, 16, 2, 64, 8
+    n_loc = B * T
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    kc = jax.random.normal(ks[0], (n_loc, stride, kvh, hd), jnp.float32)
+    vc = jax.random.normal(ks[1], (n_loc, stride, kvh, hd), jnp.float32)
+    q = jax.random.normal(ks[2], (B, Hq, 1, hd), jnp.float32)
+    table = np.arange(B * T, dtype=np.int32)
+    np.random.default_rng(0).shuffle(table)
+    table = jnp.asarray(table.reshape(B, T))
+    q_pos = jnp.full((B, 1), T * stride - 1, jnp.int32)
+    f_gather = jax.jit(lambda *a: paged_attention(
+        *a, stride=stride, row=0, qrows=1, backend="jnp"))
+    report("paged_decode_gather_us",
+           round(_bench(f_gather, q, kc, vc, table, q_pos), 1),
+           f"jnp: materializes (B,{T * stride},{kvh},{hd}) K/V per call")
+    copy_bytes = 2 * B * T * stride * kvh * hd * 4      # K and V, fp32
+    report("paged_decode_gather_copy_KB", round(copy_bytes / 1024, 1),
+           "gathered-copy traffic the fused kernel eliminates per launch")
+    page_kb = 2 * stride * kvh * hd * 4 / 1024
+    report("paged_fused_vmem_page_KB", round(page_kb, 1),
+           f"fused kernel VMEM working set: ONE (stride={stride}) page pair "
+           "+ running (m,l,acc)")
 
     # Pallas cannon_mm structural numbers (transfer to TPU directly)
     bm = bn = bk = 256

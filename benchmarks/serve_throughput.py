@@ -19,6 +19,14 @@ Standalone:
   PYTHONPATH=src python benchmarks/serve_throughput.py \\
       [--config mamba2_780m] [--timestamp 2026-07-28T00:00:00Z]
 
+``--kernel-backend`` selects the step-kernel implementation (jnp
+materialized-gather reference vs the fused Pallas paged-attention path);
+running the bench once per backend appends PAIRED trajectory entries.  On
+CPU hosts the pallas path runs in interpret mode and is EXPECTED to be
+slower — there the pairing is a parity/ABI record, not a speedup claim;
+the bytes the fused path eliminates are priced structurally in
+``kernel_bench.py`` and the wall-clock win realizes on TPU.
+
 ``--config`` serves a reduced registry architecture instead of the built-in
 dense bench model — including SSM/hybrid families, which exercise the dense
 StateSpec path end to end.  ``--steps N`` runs a smoke pass: the workload is
@@ -96,17 +104,22 @@ def _append_trajectory(json_path, record):
     return len(history)
 
 
-def run(report, steps=None, json_path="auto", config=None, timestamp=None):
+def run(report, steps=None, json_path="auto", config=None, timestamp=None,
+        kernel_backend=None):
     # "auto": full runs append to the committed BENCH_serve.json trajectory;
     # smoke (--steps) runs never touch it unless --json asks explicitly
     if json_path == "auto":
         json_path = None if steps is not None else JSON_PATH
+    if kernel_backend is None:     # same env-honoring default as the engine
+        from repro.kernels import default_kernel_backend
+        kernel_backend = default_kernel_backend()
     cfg = _bench_config(config)
     mesh = jax.make_mesh((1, 16), (DATA, MODEL),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
     plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
     ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8),
-                      block_pos_stride=8)     # default chunk ladder -> (16, 64)
+                      block_pos_stride=8,     # default chunk ladder -> (16, 64)
+                      kernel_backend=kernel_backend)
     eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
 
     prompts, sampling = _workload(np.random.default_rng(0), cfg.vocab_size)
@@ -146,6 +159,8 @@ def run(report, steps=None, json_path="auto", config=None, timestamp=None):
 
     st = eng.stats
     tok_s = eng.throughput_tok_s()
+    report("serve.engine.kernel_backend", kernel_backend,
+           "jnp = materialized gather; pallas = fused in-place page reads")
     report("serve.engine.tokens_per_sec", f"{tok_s:.1f}",
            f"{st.tokens_generated} tokens, {st.steps} launches")
     report("serve.engine.executables", eng.queue.n_executables,
@@ -179,6 +194,7 @@ def run(report, steps=None, json_path="auto", config=None, timestamp=None):
         payload = {
             "bench": "serve_throughput",
             "config": cfg.name,
+            "kernel_backend": kernel_backend,
             "timestamp": timestamp or datetime.datetime.now(
                 datetime.timezone.utc).isoformat(timespec="seconds"),
             "mode": "smoke" if steps is not None else "full",
@@ -219,6 +235,13 @@ def main():
                     help="append machine-readable results to this path "
                          "(default: BENCH_serve.json on full runs only; "
                          "smoke runs don't touch the trajectory)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["jnp", "pallas", "pallas-interpret"],
+                    help="step-kernel backend: jnp materializes gathered "
+                         "K/V copies; pallas reads pages in place inside "
+                         "the fused paged-attention kernel (paired runs "
+                         "give the trajectory a before/after comparison); "
+                         "default: REPRO_KERNEL_BACKEND or jnp")
     args = ap.parse_args()
     print("name,value,derived")
 
@@ -226,7 +249,8 @@ def main():
         print(f"{name},{value},{derived}", flush=True)
 
     run(report, steps=args.steps, json_path=args.json or "auto",
-        config=args.config, timestamp=args.timestamp)
+        config=args.config, timestamp=args.timestamp,
+        kernel_backend=args.kernel_backend)
 
 
 if __name__ == "__main__":

@@ -47,6 +47,11 @@ def main():
     ap.add_argument("--prefill-chunks", default="16,64,256",
                     help="chunked-prefill length ladder for --engine "
                          "(comma-separated; empty string disables chunking)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["jnp", "pallas", "pallas-interpret"],
+                    help="step-kernel backend for --engine (default: "
+                         "REPRO_KERNEL_BACKEND or jnp); pallas reads KV "
+                         "pages in place inside the fused kernel")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -105,10 +110,13 @@ def _main_engine(cfg, mesh, plan, args):
     s_max = -(-max(args.s_max, args.tokens + 12) // stride) * stride
     buckets = tuple(b for b in (1, 2, 4, 8) if b <= max(args.batch, 1))
     chunks = tuple(int(c) for c in args.prefill_chunks.split(",") if c)
+    ec_kw = {} if args.kernel_backend is None \
+        else {"kernel_backend": args.kernel_backend}
     eng = build_engine(cfg, mesh, plan, seed=0,
                        engine_cfg=EngineConfig(s_max=s_max, buckets=buckets,
                                                block_pos_stride=stride,
-                                               prefill_chunks=chunks))
+                                               prefill_chunks=chunks,
+                                               **ec_kw))
     rng = np.random.default_rng(0)
     vocab = min(cfg.vocab_size, 256)
     prompts = [rng.integers(0, vocab,

@@ -49,6 +49,10 @@ class ModelConfig:
     ssm_groups: int = 1
     conv_kernel: int = 4
     ssd_chunk: int = 128
+    # SSD scan kernel backend: "jnp" | "pallas" | "pallas-interpret"
+    # (callers may override per-call; serving threads the engine's
+    # kernel_backend through instead)
+    ssd_backend: str = "jnp"
     # layer pattern; empty -> homogeneous ("attn", ffn_kind) x n_layers
     layer_pattern: LayerPattern = ()
     # encoder-decoder (whisper)

@@ -25,9 +25,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import resolve_kernel_backend
 from repro.kernels.ssd_scan import ssd_decode_step, ssd_scan
 from repro.models.layers import (ParallelContext, col_slice, dense,
                                  fused_dense, rms_norm)
+
+
+def _ssd_backend_kwargs(cfg, backend: Optional[str]) -> Dict:
+    """Resolve the threaded kernel-backend name (defaulted from
+    ``cfg.ssd_backend``) into ``ssd_scan``'s (backend, interpret) pair."""
+    use_pallas, interpret = resolve_kernel_backend(
+        backend if backend is not None else cfg.ssd_backend)
+    return {"backend": "pallas" if use_pallas else "jnp",
+            "interpret": interpret}
 
 
 def _conv_param_slice(pctx: ParallelContext, w: jax.Array, di: int, gn: int,
@@ -74,9 +84,10 @@ def _conv1d_causal(x: jax.Array, w: jax.Array, b: Optional[jax.Array],
     return out.astype(x.dtype)
 
 
-def mamba_block(pctx: ParallelContext, p: Dict, x: jax.Array, cfg
-                ) -> Tuple[jax.Array, Tuple]:
-    """x (B, S_loc, D_loc) -> (y (B, S_loc, D_loc), (conv_state, ssm_state))."""
+def mamba_block(pctx: ParallelContext, p: Dict, x: jax.Array, cfg,
+                backend: Optional[str] = None) -> Tuple[jax.Array, Tuple]:
+    """x (B, S_loc, D_loc) -> (y (B, S_loc, D_loc), (conv_state, ssm_state)).
+    ``backend`` selects the SSD scan kernel (default: ``cfg.ssd_backend``)."""
     grid = pctx.grid
     i, j = grid.my_coords()
     B, S_loc, _ = x.shape
@@ -122,7 +133,7 @@ def mamba_block(pctx: ParallelContext, p: Dict, x: jax.Array, cfg
     Cg = _slice_groups(C_full, G, pctx.r, j, axis=2)
 
     y0, contrib = ssd_scan(xh, dt, A_loc, Bg, Cg, chunk=cfg.ssd_chunk,
-                           backend="jnp")
+                           **_ssd_backend_kwargs(cfg, backend))
 
     # --- cross-row state relay (affine prefix over row shards) -------------
     sumdtA = jnp.sum(dt * A_loc[None, None], axis=1)         # (B, H_loc)
@@ -158,7 +169,8 @@ def mamba_block(pctx: ParallelContext, p: Dict, x: jax.Array, cfg
 
 
 def mamba_chunk_step(pctx: ParallelContext, p: Dict, x: jax.Array,
-                     state: Tuple, cfg, n_valid: jax.Array
+                     state: Tuple, cfg, n_valid: jax.Array,
+                     backend: Optional[str] = None
                      ) -> Tuple[jax.Array, Tuple]:
     """Multi-token state advance for chunked prefill (gemv layout).
 
@@ -171,6 +183,9 @@ def mamba_chunk_step(pctx: ParallelContext, p: Dict, x: jax.Array,
     ``n_valid`` contract the paged-attention chunk path uses.  At
     ``n_valid == 1`` this computes :func:`mamba_decode_step`'s update, so
     decode-phase slots ride through chunked launches unchanged.
+    ``backend`` selects the SSD scan kernel (jnp / pallas /
+    pallas-interpret; default ``cfg.ssd_backend``) — the serving engine
+    threads its ``kernel_backend`` through here.
     """
     conv_state, ssm_state = state
     B, L = x.shape[:2]
@@ -213,7 +228,7 @@ def mamba_chunk_step(pctx: ParallelContext, p: Dict, x: jax.Array,
     xh = xc_a.reshape(B, L, H_loc, P)
     y, new_ssm = ssd_scan(xh, dt, A_loc, Bg, Cg,
                           init_state=ssm_state.astype(jnp.float32),
-                          chunk=L, backend="jnp")
+                          chunk=L, **_ssd_backend_kwargs(cfg, backend))
 
     Dskip = col_slice(pctx, p["D"], n_loc=H_loc).astype(jnp.float32)
     y = y.astype(jnp.float32) + Dskip[None, None, :, None] \

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import default_kernel_backend, resolve_kernel_backend
+from repro.kernels.paged_attention import gather_pages, paged_attention
 from repro.models import params as pm
 from repro.models.attention import attention_partial, combine_partials
 from repro.models.config import ModelConfig, attn_static
@@ -306,45 +308,52 @@ def _attn_decode_longctx(pctx, p, x, cfg, kc, vc, pos, shard_offset,
     return y, kc, vc
 
 
-def _paged_gather(kc, vc, table, stride, row, qrows):
-    """Gather this grid row's pages of every slot from the local arena shard.
-
-    Returns (kg, vg, kv_pos): (B, T*stride, kvh, hd) per-slot KV runs plus
-    their global position labels — entries this row does not own (or
-    unallocated table slots, id -1) get positions past any query so the
-    causal mask removes them.  Shared verbatim by the one-position decode
-    path and the chunked-prefill path: the routing math (owner row
-    ``pid % q``, local index ``pid // q``, 2**30 sentinel) must stay
-    bit-identical between them."""
-    B, T = table.shape
-    hkv_loc, hd = kc.shape[-2:]
-    own = (table >= 0) & (table % qrows == row)              # (B, T)
-    lg = jnp.where(own, table // qrows, 0).reshape(-1)
-    kg = jnp.take(kc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
-    vg = jnp.take(vc, lg, axis=0).reshape(B, T * stride, hkv_loc, hd)
-    pos_grid = jnp.arange(T)[:, None] * stride + jnp.arange(stride)[None, :]
-    kv_pos = jnp.where(own[:, :, None], pos_grid[None],
-                       jnp.int32(2 ** 30)).reshape(B, T * stride)
-    return kg, vg, kv_pos
-
-
 def _rows_pmax(grid):
     """pmax over grid rows (the axis paged KV pages shard on)."""
     groups = [[i * grid.r + j for i in range(grid.q)] for j in range(grid.r)]
     return lambda t: lax.pmax(t, grid.axis, axis_index_groups=groups)
 
 
-def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride):
+def _paged_partial(q, kc, vc, table, q_pos, stride, row, qrows, backend):
+    """Per-row paged-attention partials, backend-dispatched.
+
+    ``backend="jnp"`` materializes the gathered per-slot K/V runs
+    (:func:`repro.kernels.paged_attention.gather_pages`) and scores them with ``attention_partial`` —
+    the bit-exact reference.  The pallas backends hand the arena shard and
+    the table straight to the fused kernel
+    (:mod:`repro.kernels.paged_attention`): the page gather happens inside
+    the kernel's DMA index maps, so no ``(B, T * stride, ...)`` gathered
+    copy ever exists.  Both return LSE partials, so the SHMEM row-merge
+    downstream (``combine_partials``) is backend-blind."""
+    if backend == "jnp":
+        kg, vg, kv_pos = gather_pages(kc, vc, table, stride=stride, row=row,
+                                      qrows=qrows)
+        return attention_partial(
+            q, kg.transpose(0, 2, 1, 3), vg.transpose(0, 2, 1, 3),
+            kv_pos=kv_pos, q_pos=q_pos)
+    _, interpret = resolve_kernel_backend(backend)
+    if q_pos.ndim == 1:      # scalar-pos decode: shared across the batch
+        q_pos = jnp.broadcast_to(q_pos[None, :],
+                                 (q.shape[0], q_pos.shape[0]))
+    return paged_attention(q, kc, vc, table, q_pos, stride=stride, row=row,
+                           qrows=qrows, backend="pallas",
+                           interpret=interpret)
+
+
+def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride,
+                       backend="jnp"):
     """Paged-arena decode attention (gemv projections, weights stationary).
 
     x (B, 1, D_loc) replicated over rows; kc/vc (n_blocks_local, stride,
     kvh_loc, hd) — this PE (row i) owns physical pages ``p % q == i``.
     ``table`` (B, T) holds each slot's physical page ids (-1 = unallocated).
     The new token's K/V scatters into ``table[pos // stride]`` at offset
-    ``pos % stride`` on the owner row; attention gathers each slot's pages
-    locally and the per-row partials merge with the flash-decoding LSE
-    reduction (each position is owned by exactly one row).  ``pos`` may be
-    scalar (single-shot) or (B,) (continuous batching)."""
+    ``pos % stride`` on the owner row; attention reads each slot's pages
+    (gathered copies under ``backend="jnp"``, in place inside the fused
+    kernel under the pallas backends) and the per-row partials merge with
+    the flash-decoding LSE reduction (each position is owned by exactly one
+    row).  ``pos`` may be scalar (single-shot) or (B,) (continuous
+    batching)."""
     B = x.shape[0]
     grid = pctx.grid
     i, _ = grid.my_coords()
@@ -374,11 +383,9 @@ def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride):
     kc = kc.at[li_w, off_w].set(k[:, 0].astype(kc.dtype), mode="drop")
     vc = vc.at[li_w, off_w].set(v[:, 0].astype(vc.dtype), mode="drop")
 
-    kg, vg, kv_pos = _paged_gather(kc, vc, table, stride, i, qrows)
     q_pos = jnp.reshape(pos, (1,)) if jnp.ndim(pos) == 0 else pos[:, None]
-    part = attention_partial(
-        q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
-        vg.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=q_pos)
+    part = _paged_partial(q.transpose(0, 2, 1, 3), kc, vc, table, q_pos,
+                          stride, i, qrows, backend)
     out = combine_partials(part, _rows_pmax(grid), grid.psum_rows)
     out = out.transpose(0, 2, 1, 3).reshape(B, 1, hq_loc * hd)
     y = dense(pctx, out.astype(x.dtype), p["wo"])
@@ -386,7 +393,7 @@ def _attn_decode_paged(pctx, p, x, cfg, kc, vc, pos, table, stride):
 
 
 def _attn_prefill_chunk_paged(pctx, p, x, cfg, kc, vc, pos, n_valid, table,
-                              stride):
+                              stride, backend="jnp"):
     """Chunked-prefill attention against the paged arena (gemv projections).
 
     x (B, L, D_loc) replicated over rows: each slot advances up to L
@@ -433,10 +440,8 @@ def _attn_prefill_chunk_paged(pctx, p, x, cfg, kc, vc, pos, n_valid, table,
     kc = kc.at[li_w, off_w].set(k.astype(kc.dtype), mode="drop")
     vc = vc.at[li_w, off_w].set(v.astype(vc.dtype), mode="drop")
 
-    kg, vg, kv_pos = _paged_gather(kc, vc, table, stride, i, qrows)
-    part = attention_partial(
-        q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
-        vg.transpose(0, 2, 1, 3), kv_pos=kv_pos, q_pos=pos2)
+    part = _paged_partial(q.transpose(0, 2, 1, 3), kc, vc, table, pos2,
+                          stride, i, qrows, backend)
     out = combine_partials(part, _rows_pmax(grid), grid.psum_rows)
     out = out.transpose(0, 2, 1, 3).reshape(B, L, hq_loc * hd)
     y = dense(pctx, out.astype(x.dtype), p["wo"])
@@ -448,7 +453,7 @@ def _dense_slot_gather(arena_leaves, slots):
 
     ``arena_leaves`` maps name -> (n_slots, ...) local arena; ``slots`` (B,)
     holds each lane's slot id (-1 = idle lane, which reads slot 0 as a dummy
-    and never writes back).  The dense analogue of :func:`_paged_gather` —
+    and never writes back).  The dense analogue of the paged ``gather_pages`` —
     sequence identity lives in the host-built slot vector, so fork /
     migration / preemption never reorder arena rows."""
     n_slots = next(iter(arena_leaves.values())).shape[0]
@@ -488,7 +493,8 @@ def _cross_decode(pctx, p, x, cfg, ck, cv):
 
 
 def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
-                  table=None, paged=None, n_valid=None, slots=None):
+                  table=None, paged=None, n_valid=None, slots=None,
+                  backend="jnp"):
     ast = attn_static(cfg, pctx.r) if mixer == "attn" else None
     if mixer == "attn":
         h = _norm(pctx, cfg, p["norm1"], x)
@@ -496,11 +502,13 @@ def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
             h, kc, vc = _attn_prefill_chunk_paged(pctx, p["mixer"], h, ast,
                                                   cache["k"], cache["v"],
                                                   pos, n_valid, table,
-                                                  paged.block_pos_stride)
+                                                  paged.block_pos_stride,
+                                                  backend=backend)
         elif paged is not None:
             h, kc, vc = _attn_decode_paged(pctx, p["mixer"], h, ast,
                                            cache["k"], cache["v"], pos,
-                                           table, paged.block_pos_stride)
+                                           table, paged.block_pos_stride,
+                                           backend=backend)
         elif mode == "batched":
             h, kc, vc = _attn_decode_batched(pctx, p["mixer"], h, ast,
                                              cache["k"], cache["v"], pos)
@@ -520,7 +528,7 @@ def _decode_layer(pctx, cfg, mixer, ffn, p, x, cache, pos, shard_offset, mode,
         if n_valid is not None:
             h, (conv, ssm) = mamba_chunk_step(pctx, p["mixer"], h,
                                               (st["conv"], st["ssm"]), cfg,
-                                              n_valid)
+                                              n_valid, backend=backend)
         else:
             h, (conv, ssm) = mamba_decode_step(pctx, p["mixer"], h,
                                                (st["conv"], st["ssm"]), cfg)
@@ -584,7 +592,8 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                      batch: int, s_max: int, mode: str = "batched",
                      tp_strategy: Optional[str] = None,
                      per_slot: bool = False,
-                     paged: Optional[PagedKV] = None):
+                     paged: Optional[PagedKV] = None,
+                     kernel_backend: Optional[str] = None):
     """Device-level decode step body + boundary specs (un-mapped).
 
     Returns ``(body, in_specs, out_specs, specs, pctx)`` so callers can either
@@ -608,7 +617,17 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     O(1) dense state; ``pos`` may be scalar or per-slot.  Attention-only
     models keep the exact pre-StateSpec ABI
     ``(params, arena, tokens, pos, table)``.
+
+    ``kernel_backend`` (default: :func:`repro.kernels.default_kernel_backend`,
+    i.e. ``"jnp"`` unless ``REPRO_KERNEL_BACKEND`` overrides it) selects the
+    attention kernels on the PAGED path: ``"jnp"`` keeps the materialized
+    per-slot gather; the pallas backends read KV pages in place inside the
+    fused paged-attention kernel.  Non-paged modes (batched/longctx) always
+    use the jnp attention paths.
     """
+    kernel_backend = kernel_backend if kernel_backend is not None \
+        else default_kernel_backend()
+    resolve_kernel_backend(kernel_backend)      # validate eagerly
     if tp_strategy is None:
         tp_strategy = "cannon" if mode == "batched" else "gemv"
     act_layout = "blocked" if mode == "batched" else "repl_rows"
@@ -682,7 +701,7 @@ def make_decode_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                                       group_params[posn], x,
                                       group_cache[posn], pos, shard_offset,
                                       mode, table=table, paged=paged,
-                                      slots=slots)
+                                      slots=slots, backend=kernel_backend)
                 new_caches.append(nc)
             return x, new_caches
 
@@ -726,7 +745,8 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                      batch: int, s_max: int, mode: str = "batched",
                      tp_strategy: Optional[str] = None,
                      per_slot: bool = False,
-                     paged: Optional[PagedKV] = None):
+                     paged: Optional[PagedKV] = None,
+                     kernel_backend: Optional[str] = None):
     """serve_step(params, cache, tokens, pos[, reset|table]) -> (logits, cache).
 
     ``mode="batched"``: tokens (B,) sharded over data; Cannon projections.
@@ -736,10 +756,13 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     ``tokens`` (continuous-batching step; see :func:`make_decode_body`).
     ``paged``: the cache operand is the physically paged arena and the
     trailing operand is the (B, T) block table (see :class:`PagedKV`).
+    ``kernel_backend``: paged-path kernel selection (see
+    :func:`make_decode_body`).
     """
     body, in_specs, out_specs, specs, pctx = make_decode_body(
         cfg, mesh, plan, batch=batch, s_max=s_max, mode=mode,
-        tp_strategy=tp_strategy, per_slot=per_slot, paged=paged)
+        tp_strategy=tp_strategy, per_slot=per_slot, paged=paged,
+        kernel_backend=kernel_backend)
     mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
     return jax.jit(mapped, donate_argnums=(1,)), specs, pctx
@@ -747,7 +770,8 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
 
 def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                             batch: int, s_max: int, chunk: int,
-                            paged: PagedKV):
+                            paged: PagedKV,
+                            kernel_backend: Optional[str] = None):
     """Chunked multi-token prefill body: up to L tokens per slot per launch.
 
     The ``prefill_bs{N}_len{L}`` ABI (gemv layout, engine state arena):
@@ -771,7 +795,15 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     launch).  Prompt ingestion drops from O(prompt) to O(prompt / L)
     enqueues — the paper's amortize-the-offload rule applied to
     time-to-first-token.
+
+    ``kernel_backend`` (default: :func:`repro.kernels.default_kernel_backend`)
+    selects both the paged-attention kernel (gathered copy vs fused
+    in-place page reads) AND the SSD scan backend used by
+    :func:`repro.models.ssm.mamba_chunk_step` for dense layers.
     """
+    kernel_backend = kernel_backend if kernel_backend is not None \
+        else default_kernel_backend()
+    resolve_kernel_backend(kernel_backend)      # validate eagerly
     if not 1 <= chunk <= s_max:
         raise ValueError(f"chunk must be in [1, s_max={s_max}], got {chunk}")
     if s_max % paged.block_pos_stride:
@@ -801,7 +833,8 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                                       group_params[posn], x,
                                       group_cache[posn], pos, 0, "gemv",
                                       table=table, paged=paged,
-                                      n_valid=n_valid, slots=slots)
+                                      n_valid=n_valid, slots=slots,
+                                      backend=kernel_backend)
                 new_caches.append(nc)
             return x, new_caches
 

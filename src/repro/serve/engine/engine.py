@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hybrid import CommandQueue, HybridKernel
+from repro.kernels import check_kernel_backend, default_kernel_backend
 from repro.models import params as pm
 from repro.serve.decode import (PagedKV, make_decode_body,
                                 make_prefill_chunk_body)
@@ -72,8 +73,15 @@ class EngineConfig:
     # dense state slots (DenseSpec layers); None = max bucket.  Irrelevant
     # for attention-only models.
     n_dense_slots: Optional[int] = None
+    # kernel selection for every step executable: "jnp" (materialized-gather
+    # reference paths), "pallas" (fused paged-attention + Pallas SSD scan;
+    # interpret auto-selected off-TPU) or "pallas-interpret" (interpreter
+    # forced — the CPU CI variant).  Default honors REPRO_KERNEL_BACKEND.
+    kernel_backend: str = dataclasses.field(
+        default_factory=default_kernel_backend)
 
     def __post_init__(self):
+        check_kernel_backend(self.kernel_backend)
         pc = tuple(int(c) for c in self.prefill_chunks)
         bad = [c for c in pc if c < 2]
         if bad:
@@ -143,7 +151,8 @@ class ServingEngine:
         # the compiled executables are per-bucket
         _, _, _, specs, pctx = make_decode_body(
             cfg, mesh, plan, batch=ec.buckets[-1], s_max=ec.s_max,
-            mode=ec.mode, per_slot=True, paged=self.paged)
+            mode=ec.mode, per_slot=True, paged=self.paged,
+            kernel_backend=ec.kernel_backend)
         self.specs, self.pctx = specs, pctx
         if params is None:
             params = pm.init_params(specs, seed=seed)
@@ -231,7 +240,8 @@ class ServingEngine:
             ec = self.engine_cfg
             body, in_specs, out_specs, _, _ = make_decode_body(
                 self.cfg, self.mesh, self.plan, batch=bucket, s_max=ec.s_max,
-                mode=ec.mode, per_slot=True, paged=self.paged)
+                mode=ec.mode, per_slot=True, paged=self.paged,
+                kernel_backend=ec.kernel_backend)
             kernel = HybridKernel(
                 lambda grid, *args: body(*args), grid=self.pctx.grid,
                 in_specs=in_specs, out_specs=out_specs,
@@ -245,7 +255,8 @@ class ServingEngine:
             ec = self.engine_cfg
             body, in_specs, out_specs, _, _ = make_prefill_chunk_body(
                 self.cfg, self.mesh, self.plan, batch=bucket, s_max=ec.s_max,
-                chunk=chunk, paged=self.paged)
+                chunk=chunk, paged=self.paged,
+                kernel_backend=ec.kernel_backend)
             kernel = HybridKernel(
                 lambda grid, *args: body(*args), grid=self.pctx.grid,
                 in_specs=in_specs, out_specs=out_specs,
