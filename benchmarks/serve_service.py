@@ -1,0 +1,242 @@
+"""Open-loop service latency: Poisson arrivals through GenerateService.
+
+``serve_throughput.py`` measures the engine closed-loop (submit everything,
+drain); this bench measures what a CLIENT sees: requests arrive on a seeded
+Poisson process at ``--rate`` arrivals/sec — open loop, so arrivals do NOT
+wait for completions and an overloaded service shows up as a growing TTFT
+tail instead of a silently throttled workload.  Each arrival is one asyncio
+client streaming its own tokens; the record is the latency DISTRIBUTION
+(p50/p99 TTFT, inter-token latency, queue wait) plus the admission
+outcomes (completed / shed / rejected).
+
+The default full run sweeps one under-capacity and one over-capacity rate
+under ``fifo`` admission, then repeats the over-capacity rate under
+``deadline`` admission with the same seed and a TTFT SLO on every request:
+the paired records show load shedding converting an unbounded fifo tail
+into a bounded accepted-request tail (deadline p99 TTFT < fifo p99 TTFT at
+the same arrival rate).
+
+``BENCH_serve.json`` is the same append-only trajectory
+``serve_throughput.py`` writes: full runs append one record per
+(rate, policy) cell; explicit single-rate runs (CI's service-smoke) leave
+it alone unless ``--json`` is passed.
+
+Standalone:
+  XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
+  PYTHONPATH=src python benchmarks/serve_service.py \\
+      [--rate 4 --requests 16 --seed 0]          # smoke (CI) form
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import datetime
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.partition import DATA, MODEL, MeshPlan  # noqa: E402
+from repro.serve.engine import (EngineConfig, SamplingParams,  # noqa: E402
+                                build_engine, generate)
+from repro.serve.service import (AdmissionRejected,  # noqa: E402
+                                 GenerateService, ServiceConfig)
+
+from serve_throughput import (JSON_PATH, S_MAX,  # noqa: E402
+                              _append_trajectory, _bench_config)
+
+
+def _workload(rng, vocab, n):
+    """Seeded prompts + decode lengths (distinct from the arrival process
+    so rate sweeps at one seed serve the SAME requests)."""
+    prompts = [rng.integers(0, vocab, size=int(rng.integers(2, 12))).tolist()
+               for _ in range(n)]
+    n_toks = [int(rng.integers(4, 12)) for _ in range(n)]
+    return prompts, n_toks
+
+
+async def _drive(eng, *, admission, est_ttft_s, prompts, n_toks, rate,
+                 arrival_seed, ttft_slo_s, max_pending):
+    """One open-loop pass: Poisson arrivals, every client drains its own
+    stream concurrently.  Returns the service metrics snapshot."""
+    svc_cfg = ServiceConfig(max_pending=max_pending, admission=admission,
+                            est_ttft_s=est_ttft_s)
+    gaps = np.random.default_rng(arrival_seed).exponential(
+        1.0 / rate, size=len(prompts))
+
+    async def client(prompt, max_tokens):
+        try:
+            stream = await svc.submit(prompt, max_tokens=max_tokens,
+                                      ttft_deadline_s=ttft_slo_s)
+        except AdmissionRejected:
+            return None
+        return await stream.drain()
+
+    async with GenerateService(eng, svc_cfg) as svc:
+        tasks = []
+        for prompt, max_tokens, gap in zip(prompts, n_toks, gaps):
+            await asyncio.sleep(gap)            # open loop: arrivals don't
+            tasks.append(asyncio.create_task(   # wait for completions
+                client(prompt, max_tokens)))
+        results = await asyncio.gather(*tasks)
+        snap = svc.metrics.snapshot()
+    return results, snap
+
+
+def _check_invariants(results, snap):
+    """The service-smoke gate: every ACCEPTED request ran to completion
+    (finish_reason length/stop, or an explicit policy shed — never hung or
+    errored) and, when anything produced a token, p99 TTFT is finite."""
+    accepted = [r for r in results if r is not None]
+    for toks, comp in accepted:
+        if comp.finish_reason not in ("stop", "length", "shed"):
+            raise RuntimeError(
+                f"accepted request ended '{comp.finish_reason}'")
+        if comp.finish_reason == "shed" and toks:
+            raise RuntimeError("shed request emitted tokens")
+    n_done = snap["completed"] + snap["shed"]
+    if n_done != len(accepted):
+        raise RuntimeError(
+            f"{len(accepted)} accepted but {n_done} reached a terminal "
+            f"metrics record")
+    p99 = snap["ttft_s"]["p99"]
+    if snap["completed"] and not (p99 is not None and np.isfinite(p99)):
+        raise RuntimeError(f"p99 TTFT not finite: {p99}")
+
+
+def run(report, *, rate=None, requests=64, seed=0, admission=None,
+        config=None, ttft_slo_s=0.5, json_path="auto", timestamp=None):
+    # explicit --rate = a smoke/spot run: never touches the committed
+    # trajectory unless --json asks; the default sweep appends
+    if json_path == "auto":
+        json_path = None if rate is not None else JSON_PATH
+    cfg = _bench_config(config)
+    mesh = jax.make_mesh((1, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8), block_pos_stride=8)
+    eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
+
+    rng = np.random.default_rng(seed)
+    prompts, n_toks = _workload(rng, cfg.vocab_size, requests)
+
+    # warm every bucket executable (prefills warm the chunk kernels too),
+    # then one untimed service pass so mixed prefill/decode bucket combos
+    # only reachable under staggered arrivals are compiled too: an
+    # open-loop latency record must not charge XLA compiles to TTFT
+    for b in ec.buckets:
+        generate(eng, prompts[:b], SamplingParams(max_tokens=1))
+    asyncio.run(_drive(
+        eng, admission="fifo", est_ttft_s=0.0, prompts=prompts[:16],
+        n_toks=n_toks[:16], rate=8.0, arrival_seed=seed,
+        ttft_slo_s=None, max_pending=requests))
+
+    if rate is not None:
+        cells = [(float(rate), admission or "fifo")]
+    else:
+        # under-capacity fifo, over-capacity fifo, over-capacity deadline:
+        # the last two pair up as the shed-vs-tail comparison
+        over = 100.0
+        cells = [(2.0, admission)] if admission else \
+            [(2.0, "fifo"), (over, "fifo"), (over, "deadline")]
+
+    ts = timestamp or datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    p99_by_cell = {}
+    for cell_rate, cell_admission in cells:
+        results, snap = asyncio.run(_drive(
+            eng, admission=cell_admission, est_ttft_s=0.05,
+            prompts=prompts, n_toks=n_toks, rate=cell_rate,
+            arrival_seed=seed + 1, ttft_slo_s=ttft_slo_s,
+            max_pending=max(1, requests)))
+        _check_invariants(results, snap)
+        tag = f"rate{cell_rate:g}.{cell_admission}"
+        p99_by_cell[(cell_rate, cell_admission)] = snap["ttft_s"]["p99"]
+        report(f"service.{tag}.accepted", snap["submitted"],
+               f"of {requests} offered ({snap['rejected']} rejected)")
+        report(f"service.{tag}.completed", snap["completed"],
+               f"{snap['shed']} shed by admission policy")
+        for key in ("ttft_s", "itl_s", "queue_wait_s"):
+            st = snap[key]
+            if st["n"]:
+                report(f"service.{tag}.{key}.p50", f"{st['p50']:.4f}",
+                       f"p99 {st['p99']:.4f} over {st['n']}")
+        if json_path:
+            n = _append_trajectory(json_path, {
+                "bench": "serve_service",
+                "config": cfg.name,
+                "admission": cell_admission,
+                "rate_per_s": cell_rate,
+                "requests": requests,
+                "seed": seed,
+                "ttft_slo_s": ttft_slo_s,
+                "timestamp": ts,
+                "accepted": snap["submitted"],
+                "completed": snap["completed"],
+                "shed": snap["shed"],
+                "rejected": snap["rejected"],
+                "tokens": snap["tokens"],
+                "preemptions": eng.scheduler.n_preemptions,
+                **{key: {s: (round(v, 5) if isinstance(v, float) else v)
+                         for s, v in snap[key].items()}
+                   for key in ("ttft_s", "itl_s", "queue_wait_s")},
+            })
+            report(f"service.{tag}.json", os.path.relpath(json_path),
+                   f"trajectory appended ({n} records)")
+
+    fifo_p99 = p99_by_cell.get((100.0, "fifo"))
+    edf_p99 = p99_by_cell.get((100.0, "deadline"))
+    if fifo_p99 is not None and edf_p99 is not None:
+        report("service.overload.p99_ttft_fifo_vs_deadline",
+               f"{fifo_p99:.4f}/{edf_p99:.4f}",
+               "deadline sheds infeasible requests; accepted tail stays "
+               "under the SLO")
+    return p99_by_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=None,
+                    help="single arrival rate (requests/sec); default: the "
+                         "full under/over-capacity sweep")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="offered load per cell")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload + arrival-process seed")
+    ap.add_argument("--admission", default=None,
+                    choices=["fifo", "deadline", "fair_share"],
+                    help="single policy to bench (default: the sweep's "
+                         "fifo/fifo/deadline cells)")
+    ap.add_argument("--config", default="srv-bench",
+                    help="registry architecture (reduced smoke sibling), "
+                         "e.g. qwen2-0.5b")
+    ap.add_argument("--ttft-slo", type=float, default=0.5, dest="ttft_slo",
+                    help="per-request TTFT deadline in seconds (enforced "
+                         "only by the deadline policy)")
+    ap.add_argument("--timestamp", default=None,
+                    help="timestamp recorded in trajectory entries")
+    ap.add_argument("--json", default=None,
+                    help="append records to this path (default: "
+                         "BENCH_serve.json on full sweeps; single-rate "
+                         "runs don't touch the trajectory)")
+    args = ap.parse_args()
+    print("name,value,derived")
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    run(report, rate=args.rate, requests=args.requests, seed=args.seed,
+        admission=args.admission, config=args.config,
+        ttft_slo_s=args.ttft_slo, json_path=args.json or "auto",
+        timestamp=args.timestamp)
+
+
+if __name__ == "__main__":
+    main()

@@ -105,7 +105,7 @@ def _append_trajectory(json_path, record):
 
 
 def run(report, steps=None, json_path="auto", config=None, timestamp=None,
-        kernel_backend=None):
+        kernel_backend=None, seed=0):
     # "auto": full runs append to the committed BENCH_serve.json trajectory;
     # smoke (--steps) runs never touch it unless --json asks explicitly
     if json_path == "auto":
@@ -122,7 +122,8 @@ def run(report, steps=None, json_path="auto", config=None, timestamp=None,
                       kernel_backend=kernel_backend)
     eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
 
-    prompts, sampling = _workload(np.random.default_rng(0), cfg.vocab_size)
+    prompts, sampling = _workload(np.random.default_rng(seed),
+                                  cfg.vocab_size)
     ttfts = []
     if steps is not None:
         # smoke pass: submit everything, run exactly `steps` step kernels
@@ -195,6 +196,7 @@ def run(report, steps=None, json_path="auto", config=None, timestamp=None,
             "bench": "serve_throughput",
             "config": cfg.name,
             "kernel_backend": kernel_backend,
+            "seed": seed,
             "timestamp": timestamp or datetime.datetime.now(
                 datetime.timezone.utc).isoformat(timespec="seconds"),
             "mode": "smoke" if steps is not None else "full",
@@ -228,6 +230,10 @@ def main():
                     help="registry architecture to serve (reduced smoke "
                          "sibling), e.g. mamba2_780m; default: the built-in "
                          "dense bench model")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload sampling seed (prompt lengths, token "
+                         "ids, per-request max_tokens); recorded in the "
+                         "trajectory entry for reproducible comparisons")
     ap.add_argument("--timestamp", default=None,
                     help="timestamp recorded in the trajectory entry "
                          "(default: current UTC time)")
@@ -250,7 +256,7 @@ def main():
 
     run(report, steps=args.steps, json_path=args.json or "auto",
         config=args.config, timestamp=args.timestamp,
-        kernel_backend=args.kernel_backend)
+        kernel_backend=args.kernel_backend, seed=args.seed)
 
 
 if __name__ == "__main__":

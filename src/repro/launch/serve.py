@@ -7,6 +7,13 @@ Example (single fixed batch):
 With ``--engine`` the same model is served through the continuous-batching
 engine (mixed-length workload, bucketed executables, paged-KV admission —
 see docs/serving.md).
+
+With ``--service`` the workload instead arrives through the asyncio
+``GenerateService`` front-end — concurrent streaming clients over one
+engine thread, pluggable admission (``--admission fifo|deadline|
+fair_share``) — and the run ends by printing the ``ServiceMetrics``
+snapshot (p50/p99 TTFT, inter-token and queue-wait latencies, shed and
+reject counters).
 """
 
 from __future__ import annotations
@@ -42,8 +49,22 @@ def main():
     ap.add_argument("--engine", action="store_true",
                     help="serve a mixed-length workload through the "
                          "continuous-batching engine")
+    ap.add_argument("--service", action="store_true",
+                    help="serve through the asyncio GenerateService "
+                         "front-end (concurrent streaming clients, "
+                         "SLO-aware admission) and print its metrics "
+                         "snapshot")
+    ap.add_argument("--admission", default="fifo",
+                    choices=["fifo", "deadline", "fair_share"],
+                    help="admission policy for --service")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate (req/s) for --service")
+    ap.add_argument("--ttft-slo", type=float, default=None, dest="ttft_slo",
+                    help="per-request TTFT deadline in seconds for "
+                         "--service (sheds infeasible requests under "
+                         "--admission deadline)")
     ap.add_argument("--requests", type=int, default=8,
-                    help="workload size for --engine")
+                    help="workload size for --engine / --service")
     ap.add_argument("--prefill-chunks", default="16,64,256",
                     help="chunked-prefill length ladder for --engine "
                          "(comma-separated; empty string disables chunking)")
@@ -61,10 +82,12 @@ def main():
     mesh = make_smoke_mesh(data=1)
     plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
 
-    if args.engine:
+    if args.engine or args.service:
         if args.mode != "gemv":
             print(f"note: --engine serves via the per-slot gemv decode "
                   f"layout; --mode {args.mode} ignored")
+        if args.service:
+            return _main_service(cfg, mesh, plan, args)
         return _main_engine(cfg, mesh, plan, args)
 
     step, specs, pctx = make_decode_step(
@@ -101,9 +124,8 @@ def main():
         print(f"  seq[{b}]: {seqs[b][:16].tolist()} ...")
 
 
-def _main_engine(cfg, mesh, plan, args):
-    from repro.serve.engine import (EngineConfig, SamplingParams,
-                                    build_engine, generate)
+def _build_engine(cfg, mesh, plan, args):
+    from repro.serve.engine import EngineConfig, build_engine
     # every mixer maps to a StateSpec (paged KV for attn, dense slots for
     # SSM), so dense/moe/hybrid/ssm families all serve through the engine
     stride = 16
@@ -112,16 +134,25 @@ def _main_engine(cfg, mesh, plan, args):
     chunks = tuple(int(c) for c in args.prefill_chunks.split(",") if c)
     ec_kw = {} if args.kernel_backend is None \
         else {"kernel_backend": args.kernel_backend}
-    eng = build_engine(cfg, mesh, plan, seed=0,
-                       engine_cfg=EngineConfig(s_max=s_max, buckets=buckets,
-                                               block_pos_stride=stride,
-                                               prefill_chunks=chunks,
-                                               **ec_kw))
+    return build_engine(cfg, mesh, plan, seed=0,
+                        engine_cfg=EngineConfig(s_max=s_max, buckets=buckets,
+                                                block_pos_stride=stride,
+                                                prefill_chunks=chunks,
+                                                **ec_kw))
+
+
+def _workload(cfg, args):
     rng = np.random.default_rng(0)
     vocab = min(cfg.vocab_size, 256)
-    prompts = [rng.integers(0, vocab,
-                            size=int(rng.integers(2, 12))).tolist()
-               for _ in range(args.requests)]
+    return [rng.integers(0, vocab,
+                         size=int(rng.integers(2, 12))).tolist()
+            for _ in range(args.requests)]
+
+
+def _main_engine(cfg, mesh, plan, args):
+    from repro.serve.engine import SamplingParams, generate
+    eng = _build_engine(cfg, mesh, plan, args)
+    prompts = _workload(cfg, args)
     outs = generate(eng, prompts, SamplingParams(max_tokens=args.tokens))
     for c in outs[:4]:
         print(f"  {c.request_id}: prompt[{len(c.prompt)}] -> "
@@ -142,6 +173,47 @@ def _main_engine(cfg, mesh, plan, args):
           f"in {st.prefill_launches} launches "
           f"({st.prefill_chunk_launches} chunked); "
           f"decode: {st.decode_launches} launches; mean TTFT {ttft_ms}")
+
+
+def _main_service(cfg, mesh, plan, args):
+    import asyncio
+    import json
+
+    from repro.serve.service import (AdmissionRejected, GenerateService,
+                                     ServiceConfig)
+    eng = _build_engine(cfg, mesh, plan, args)
+    prompts = _workload(cfg, args)
+    gaps = np.random.default_rng(1).exponential(1.0 / args.rate,
+                                                size=args.requests)
+
+    async def client(svc, prompt):
+        try:
+            stream = await svc.submit(prompt, max_tokens=args.tokens,
+                                      ttft_deadline_s=args.ttft_slo)
+        except AdmissionRejected as e:
+            print(f"  rejected: {e.reason}")
+            return None
+        toks, comp = await stream.drain()
+        return comp
+
+    async def drive():
+        svc_cfg = ServiceConfig(admission=args.admission)
+        async with GenerateService(eng, svc_cfg) as svc:
+            tasks = []
+            for prompt, gap in zip(prompts, gaps):
+                await asyncio.sleep(gap)    # open loop: Poisson arrivals
+                tasks.append(asyncio.create_task(client(svc, prompt)))
+            comps = await asyncio.gather(*tasks)
+            return comps, svc.metrics.snapshot()
+
+    comps, snap = asyncio.run(drive())
+    for c in [c for c in comps if c is not None][:4]:
+        print(f"  {c.request_id}: prompt[{len(c.prompt)}] -> "
+              f"{c.tokens[:12]} ({c.finish_reason})")
+    print(f"service ({args.admission} admission, rate {args.rate:g}/s): "
+          f"{snap['completed']} completed, {snap['shed']} shed, "
+          f"{snap['rejected']} rejected, {snap['tokens']} tokens")
+    print(json.dumps(snap, indent=2))
 
 
 if __name__ == "__main__":

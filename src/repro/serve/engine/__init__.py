@@ -17,20 +17,23 @@ the per-bucket step kernels gather/scatter KV through per-slot block-table
 operands (docs/serving.md).
 """
 
-from repro.serve.engine.api import Completion, build_engine, generate
+from repro.serve.engine.api import (Completion, build_engine, completion_of,
+                                    generate)
 from repro.serve.engine.block_cache import (BlockLayout, BlockPool,
                                             DenseSlotPool, PoolExhausted,
                                             SequenceBlocks, block_layout)
 from repro.serve.engine.engine import EngineConfig, EngineStats, ServingEngine
 from repro.serve.engine.request import Request, RequestState, SamplingParams
-from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
+from repro.serve.engine.scheduler import (AdmissionPolicy, FifoAdmission,
+                                          ScheduledStep, Scheduler,
                                           SchedulerConfig)
 from repro.serve.engine.state_store import NullStateHook, StateStore
 
 __all__ = [
-    "BlockLayout", "BlockPool", "Completion", "DenseSlotPool",
-    "EngineConfig", "EngineStats", "NullStateHook", "PoolExhausted",
-    "Request", "RequestState", "SamplingParams", "ScheduledStep",
-    "Scheduler", "SchedulerConfig", "SequenceBlocks", "ServingEngine",
-    "StateStore", "block_layout", "build_engine", "generate",
+    "AdmissionPolicy", "BlockLayout", "BlockPool", "Completion",
+    "DenseSlotPool", "EngineConfig", "EngineStats", "FifoAdmission",
+    "NullStateHook", "PoolExhausted", "Request", "RequestState",
+    "SamplingParams", "ScheduledStep", "Scheduler", "SchedulerConfig",
+    "SequenceBlocks", "ServingEngine", "StateStore", "block_layout",
+    "build_engine", "completion_of", "generate",
 ]

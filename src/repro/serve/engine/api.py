@@ -22,9 +22,25 @@ class Completion:
     request_id: str
     prompt: List[int]
     tokens: List[int]              # generated tokens (incl. EOS when hit)
-    finish_reason: str             # "stop" | "length" | "cancelled"
+    finish_reason: str             # "stop" | "length" | "cancelled" | "shed"
     n_preemptions: int
     ttft_s: Optional[float] = None  # submit-to-first-token (None if no token)
+    # submit-to-first-admission wait (None when never admitted — a request
+    # shed from the waiting queue has queue_wait_s None AND zero tokens)
+    queue_wait_s: Optional[float] = None
+
+
+def completion_of(request) -> Completion:
+    """Freeze one finished (or mid-flight) Request into a Completion —
+    the single place the Request-timestamp -> Completion threading lives
+    (``generate()``, the async service and the benches all use it)."""
+    return Completion(request_id=request.request_id,
+                      prompt=list(request.prompt),
+                      tokens=list(request.output_tokens),
+                      finish_reason=request.finish_reason or "length",
+                      n_preemptions=request.n_preemptions,
+                      ttft_s=request.ttft_s,
+                      queue_wait_s=request.queue_wait_s)
 
 
 def build_engine(cfg, mesh, plan, *, engine_cfg: Optional[EngineConfig] = None,
@@ -52,8 +68,4 @@ def generate(engine: ServingEngine, prompts: Sequence[Sequence[int]],
                 f"{len(prompts)} prompts but {len(per)} sampling params")
     requests = [engine.submit(p, s) for p, s in zip(prompts, per)]
     engine.drain()
-    return [Completion(request_id=r.request_id, prompt=list(r.prompt),
-                       tokens=list(r.output_tokens),
-                       finish_reason=r.finish_reason or "length",
-                       n_preemptions=r.n_preemptions, ttft_s=r.ttft_s)
-            for r in requests]
+    return [completion_of(r) for r in requests]

@@ -191,10 +191,22 @@ class ServingEngine:
         self.stats = EngineStats()
 
     # -- request intake ----------------------------------------------------
+    #
+    # Thread-safety boundary: `check_request` is a pure read over immutable
+    # engine config (callable from any thread — the async service validates
+    # BEFORE crossing onto the engine thread so rejections surface at the
+    # caller); everything else — submit_request, step, cancel — mutates
+    # scheduler/pool/arena state and must run on the single thread that
+    # drives the engine (repro.serve.service serializes all of them onto
+    # its engine thread via a command queue).
 
     def submit(self, prompt: Sequence[int],
-               sampling: Optional[SamplingParams] = None) -> Request:
-        return self._submit(Request(prompt, sampling))
+               sampling: Optional[SamplingParams] = None,
+               **request_kw) -> Request:
+        """Validate and enqueue one request; extra keywords (priority,
+        tenant, ttft_deadline_s) are SLO metadata for the admission-policy
+        layer."""
+        return self.submit_request(Request(prompt, sampling, **request_kw))
 
     def fork(self, parent: Request,
              sampling: Optional[SamplingParams] = None) -> Request:
@@ -206,10 +218,11 @@ class ServingEngine:
         *copy* of the parent's published boundary snapshot instead, so
         hybrid forks share prompt KV pages while owning their own
         recurrent state."""
-        return self._submit(parent.fork(sampling))
+        return self.submit_request(parent.fork(sampling))
 
-    def _submit(self, req: Request) -> Request:
-        req.submit_t = time.perf_counter()      # TTFT clock starts here
+    def check_request(self, req: Request) -> None:
+        """Raise ValueError when ``req`` can never be served by this
+        engine.  Pure read of immutable configuration — safe off-thread."""
         ec = self.engine_cfg
         if len(req.prompt) + req.sampling.max_tokens > ec.s_max:
             raise ValueError(
@@ -225,6 +238,15 @@ class ServingEngine:
             raise ValueError(
                 f"sequence needs up to {self.pool.blocks_for(worst)} KV "
                 f"blocks but the pool holds {self.pool.n_blocks}")
+
+    def submit_request(self, req: Request) -> Request:
+        """Engine-thread half of intake: validate + hand to the scheduler.
+        A pre-stamped ``submit_t`` (the service stamps at the client's
+        ``await submit()``) is preserved so queue-wait and TTFT include the
+        command-queue hop; bare callers get stamped here."""
+        if not req.submit_t:
+            req.submit_t = time.perf_counter()  # TTFT clock starts here
+        self.check_request(req)
         self.scheduler.submit(req)
         return req
 

@@ -10,7 +10,9 @@ A preempted request drops its KV blocks and re-enters WAITING with
 ``num_cached = 0``; on re-admission it replays prompt *and* already-generated
 tokens through the step kernel (recompute-style preemption — no KV swap).
 Cancellation is legal from any non-terminal state and is recorded as
-``finish_reason == "cancelled"``.
+``finish_reason == "cancelled"``; an admission policy rejecting a WAITING
+request (TTFT deadline infeasible) finishes it as ``"shed"`` — the full
+``finish_reason`` vocabulary is {stop, length, cancelled, shed}.
 """
 
 from __future__ import annotations
@@ -60,13 +62,27 @@ class Request:
 
     def __init__(self, prompt: Sequence[int],
                  sampling: Optional[SamplingParams] = None,
-                 request_id: Optional[str] = None):
+                 request_id: Optional[str] = None, *,
+                 priority: int = 0, tenant: str = "default",
+                 ttft_deadline_s: Optional[float] = None):
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("prompt must contain at least one token")
+        if ttft_deadline_s is not None and ttft_deadline_s <= 0:
+            raise ValueError(
+                f"ttft_deadline_s must be > 0, got {ttft_deadline_s}")
         self.request_id = request_id or f"req-{next(_request_ids)}"
         self.prompt = prompt
         self.sampling = sampling or SamplingParams()
+        # SLO metadata, consumed by the admission-policy layer
+        # (repro.serve.service.admission): higher priority admits first
+        # under fair_share and may preempt lower-priority running work;
+        # ttft_deadline_s is the submit-relative first-token deadline the
+        # deadline policy schedules (and sheds) against.
+        self.priority = int(priority)
+        self.tenant = tenant
+        self.ttft_deadline_s = \
+            None if ttft_deadline_s is None else float(ttft_deadline_s)
         self.state = RequestState.WAITING
         self.output_tokens: List[int] = []
         # KV entries written to the device cache so far.  In steady-state
@@ -84,9 +100,12 @@ class Request:
         self.dense_snapshot = None
         self.finish_reason: Optional[str] = None
         self.n_preemptions = 0
-        # perf_counter stamps for time-to-first-token (0.0 = not yet)
+        # perf_counter stamps for time-to-first-token (0.0 = not yet);
+        # admit_t is the FIRST admission (queue-wait ends there — a later
+        # preemption/re-admission is a scheduling event, not queue wait)
         self.submit_t = 0.0
         self.first_token_t = 0.0
+        self.admit_t = 0.0
 
     # -- sequence view -----------------------------------------------------
 
@@ -120,6 +139,22 @@ class Request:
         return None
 
     @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Submit-to-first-admission latency (None until admitted)."""
+        if self.submit_t and self.admit_t:
+            return self.admit_t - self.submit_t
+        return None
+
+    @property
+    def deadline_t(self) -> Optional[float]:
+        """Absolute first-token deadline on the perf_counter clock (None
+        when no TTFT SLO was requested or the request is not yet
+        submitted)."""
+        if self.ttft_deadline_s is not None and self.submit_t:
+            return self.submit_t + self.ttft_deadline_s
+        return None
+
+    @property
     def is_finished(self) -> bool:
         return self.state == RequestState.FINISHED
 
@@ -129,7 +164,9 @@ class Request:
         accounting: at admission the scheduler adopts the parent's
         published full prompt pages through the pool's prefix map, so both
         sequences' block tables point at the same physical arena pages."""
-        return Request(self.prompt, sampling or self.sampling)
+        return Request(self.prompt, sampling or self.sampling,
+                       priority=self.priority, tenant=self.tenant,
+                       ttft_deadline_s=self.ttft_deadline_s)
 
     # -- state machine -----------------------------------------------------
 

@@ -6,11 +6,16 @@ Policy (vLLM-style, adapted to the one-executable-per-bucket constraint):
     (``prefill_bs{N}`` / ``decode_bs{N}`` in SHARK terms); the active bucket
     is the smallest one covering the running set, so a mixed workload never
     compiles per-request — at most one step executable per bucket.
-  * FIFO admission: a waiting request is admitted when a slot is free and
-    the pool can back its whole current sequence plus one lookahead token.
-    Admission first adopts any published full-page prompt prefix from the
-    pool (physically shared pages; the covered positions are skipped, not
-    replayed), then allocates fresh pages for the remainder.
+  * Pluggable admission: a waiting request is admitted when a slot is free
+    and the pool can back its whole current sequence plus one lookahead
+    token.  WHICH waiting request is tried next — and whether a blocked
+    candidate sheds, skips, or preempts running work — is delegated to an
+    :class:`AdmissionPolicy` (default :class:`FifoAdmission`, the original
+    head-of-line FIFO; ``repro.serve.service.admission`` adds SLO-aware
+    ``deadline`` and ``fair_share`` policies).  Admission first adopts any
+    published full-page prompt prefix from the pool (physically shared
+    pages; the covered positions are skipped, not replayed), then
+    allocates fresh pages for the remainder.
   * Before every step each running request's block table is grown to cover
     its next position; on pool exhaustion the *youngest* running request is
     preempted (blocks released, recompute on re-admission) until the oldest
@@ -34,8 +39,9 @@ The scheduler is pure host logic over :mod:`request` and
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Sequence, Set, Tuple
 
 from repro.serve.engine.block_cache import BlockPool, PoolExhausted, \
     SequenceBlocks
@@ -44,6 +50,59 @@ from repro.serve.engine.request import Request, RequestState
 
 def _is_pow2(n: int) -> bool:
     return n >= 1 and (n & (n - 1)) == 0
+
+
+class AdmissionPolicy:
+    """The scheduler's admission hook: WHICH waiting request to try next,
+    which to reject outright, and whether a blocked candidate may evict
+    running work.  The scheduler keeps all resource accounting (pages,
+    dense slots, buckets); the policy only orders and prunes.
+
+    Contract per ``schedule()`` round:
+
+      * :meth:`shed` runs once, first — requests it returns leave the
+        waiting queue and finish as ``"shed"`` (never admitted).
+      * :meth:`select` is called repeatedly with the ids the round already
+        failed to admit (``blocked``); returning None ends admission.
+        Head-of-line blocking vs. skip-ahead is therefore the policy's
+        choice, not the scheduler's.
+      * :meth:`victim` is consulted when the selection cannot be admitted
+        for capacity: a returned running request is preempted (recompute
+        on re-admission) and the selection is retried; None falls back to
+        marking the selection blocked.
+      * :meth:`on_admit` fires after a successful admission (round-robin
+        cursors live here).
+    """
+
+    name = "base"
+
+    def shed(self, waiting: Sequence[Request], now: float) -> List[Request]:
+        return []
+
+    def select(self, waiting: Sequence[Request], running: Sequence[Request],
+               now: float, blocked: Set[str]) -> Optional[Request]:
+        raise NotImplementedError
+
+    def victim(self, head: Request,
+               running: Sequence[Request]) -> Optional[Request]:
+        return None
+
+    def on_admit(self, request: Request) -> None:
+        pass
+
+
+class FifoAdmission(AdmissionPolicy):
+    """The original policy: strict arrival order with head-of-line
+    blocking — if the oldest waiting request does not fit, nothing younger
+    may jump it (its pages free up soonest exactly because everything
+    running is older)."""
+
+    name = "fifo"
+
+    def select(self, waiting, running, now, blocked):
+        if waiting and waiting[0].request_id not in blocked:
+            return waiting[0]
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +138,9 @@ class ScheduledStep:
     slot_map: List[int]              # new slot -> previous slot (-1 = none)
     admitted: List[Request]
     preempted: List[Request]
+    # WAITING requests the admission policy rejected this round (already
+    # FINISHED with reason "shed"); the service layer reports them
+    shed: List[Request] = dataclasses.field(default_factory=list)
     # per-slot known-but-unfed token counts (0 = idle slot; 1 = steady-state
     # decode; >1 = prompt/replay still to ingest).  The engine picks the
     # chunked-prefill length L from these, so a launch may mix decode slots
@@ -105,15 +167,19 @@ class ScheduledStep:
 class Scheduler:
     def __init__(self, pool: BlockPool,
                  config: Optional[SchedulerConfig] = None,
-                 state=None):
+                 state=None, admission: Optional[AdmissionPolicy] = None,
+                 clock=time.perf_counter):
         from repro.serve.engine.state_store import NullStateHook
         self.pool = pool
         self.config = config or SchedulerConfig()
         self.state = state if state is not None else NullStateHook()
+        self.admission = admission or FifoAdmission()
+        self.clock = clock                   # injectable for policy tests
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []     # admission order (oldest first)
         self._bucket: Optional[int] = None
         self.n_preemptions = 0
+        self.n_shed = 0
 
     # -- intake ------------------------------------------------------------
 
@@ -155,21 +221,27 @@ class Scheduler:
             request.blocks = None
         request.slot = None
 
+    def _evict(self, victim: Request) -> Request:
+        """Preempt ``victim``: release its pages/slot (snapshot-first when
+        that makes the restore replay-free) and push it to the FRONT of the
+        waiting queue for earliest re-admission."""
+        self.running.remove(victim)
+        # snapshot-before-release: the hook may capture the victim's
+        # dense leaves (replay-free restore) while num_cached is intact
+        self.state.on_release(victim, preempting=True)
+        if victim.blocks is not None:
+            victim.blocks.release_all()
+            victim.blocks = None
+        victim.preempt()
+        self.waiting.appendleft(victim)   # front: re-admit first
+        self.n_preemptions += 1
+        return victim
+
     def _preempt_one(self, keep: Request) -> Optional[Request]:
         """Evict the youngest running request other than ``keep``."""
         for victim in reversed(self.running):
-            if victim is keep:
-                continue
-            self.running.remove(victim)
-            # snapshot-before-release: the hook may capture the victim's
-            # dense leaves (replay-free restore) while num_cached is intact
-            self.state.on_release(victim, preempting=True)
-            victim.blocks.release_all()
-            victim.blocks = None
-            victim.preempt()
-            self.waiting.appendleft(victim)   # front: re-admit first
-            self.n_preemptions += 1
-            return victim
+            if victim is not keep:
+                return self._evict(victim)
         return None
 
     def _peek_shared_prefix(self, request: Request) -> Tuple[int, List[bool]]:
@@ -223,14 +295,35 @@ class Scheduler:
                             f"single sequence of {r.num_cached + 1} tokens")
                     preempted.append(victim)
 
-        # 2. FIFO admission into free capacity.  The resume position comes
-        #    from pages AND dense state together: published full-page prompt
-        #    prefixes are adopted (shared physical pages, positions skipped
-        #    outright) up to the furthest point the state hook can also back
-        #    with a dense snapshot; only the remainder allocates fresh pages.
+        # 2. Policy-ordered admission into free capacity.  The resume
+        #    position comes from pages AND dense state together: published
+        #    full-page prompt prefixes are adopted (shared physical pages,
+        #    positions skipped outright) up to the furthest point the state
+        #    hook can also back with a dense snapshot; only the remainder
+        #    allocates fresh pages.  The AdmissionPolicy decides the try
+        #    order, sheds infeasible requests, and may name a preemption
+        #    victim when its selection is capacity-blocked.
+        now = self.clock()
+        shed: List[Request] = []
+        for r in self.admission.shed(list(self.waiting), now):
+            self.waiting.remove(r)
+            r.finish("shed")
+            self.n_shed += 1
+            shed.append(r)
         admitted: List[Request] = []
-        while self.waiting and len(self.running) < self.config.max_batch:
-            head = self.waiting[0]
+        blocked: set = set()
+        while self.waiting:
+            head = self.admission.select(self.waiting, self.running,
+                                         now, blocked)
+            if head is None:
+                break
+            if len(self.running) >= self.config.max_batch:
+                # batch full: only priority preemption (a policy naming a
+                # strictly-lower-priority victim) can still admit
+                victim = self.admission.victim(head, self.running)
+                if victim is None or victim not in self.running:
+                    break
+                preempted.append(self._evict(victim))
             stride = self.pool.block_pos_stride
             if needs_pages:
                 n_peek, revive_flags = self._peek_shared_prefix(head)
@@ -247,15 +340,20 @@ class Scheduler:
                 needed = n_revive = 0
             if not self.pool.can_alloc(needed + n_revive) \
                     or not self.state.can_admit(head):
+                victim = self.admission.victim(head, self.running)
+                if victim is not None and victim in self.running:
+                    preempted.append(self._evict(victim))
+                    continue      # retry head against the freed capacity
                 if not self.running:
                     raise RuntimeError(
                         f"engine capacity too small to admit "
                         f"{head.request_id} ({needed} KV blocks needed of "
                         f"{self.pool.n_blocks}; dense slot "
                         f"available: {self.state.can_admit(head)})")
-                break
+                blocked.add(head.request_id)
+                continue          # the policy decides whether anyone skips it
             shared = self._shared_prefix_pages(head, n_shared)
-            self.waiting.popleft()
+            self.waiting.remove(head)
             head.blocks = SequenceBlocks(self.pool)
             head.blocks.adopt(shared)
             if needs_pages:
@@ -267,7 +365,10 @@ class Scheduler:
                 # pages and/or restored dense leaves): never replayed
                 head.num_cached = resume
             head.transition(RequestState.PREFILL)
+            if not head.admit_t:
+                head.admit_t = self.clock()   # queue wait ends at FIRST admit
             self.running.append(head)
+            self.admission.on_admit(head)
             admitted.append(head)
 
         if not self.running:
@@ -300,4 +401,4 @@ class Scheduler:
         remaining = [0 if r is None else r.remaining_known for r in slots]
         return ScheduledStep(bucket=bucket, slots=slots, slot_map=slot_map,
                              admitted=admitted, preempted=preempted,
-                             remaining=remaining)
+                             shed=shed, remaining=remaining)

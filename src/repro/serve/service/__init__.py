@@ -1,0 +1,30 @@
+"""Async serving service over the continuous-batching engine.
+
+Layering (top = closest to the user):
+
+    service.GenerateService    asyncio front-end: concurrent clients,
+                               per-request streams, backpressure,
+                               clean async cancellation
+      admission.make_policy    SLO-aware admission (fifo / deadline /
+                               fair_share) plugged into the engine
+                               Scheduler's AdmissionPolicy hook
+      metrics.ServiceMetrics   per-request TTFT / ITL / queue-wait records,
+                               rolling p50/p99, shed/reject counters
+        engine.ServingEngine   the synchronous drive loop (one thread)
+
+Benchmarked open-loop (Poisson arrivals) by ``benchmarks/serve_service.py``;
+see docs/serving.md §Async service.
+"""
+
+from repro.serve.service.admission import (DeadlineAdmission,
+                                           FairShareAdmission, make_policy)
+from repro.serve.service.metrics import (RequestMetrics, ServiceMetrics,
+                                         percentile)
+from repro.serve.service.service import (AdmissionRejected, GenerateService,
+                                         ServiceConfig, ServiceStream)
+
+__all__ = [
+    "AdmissionRejected", "DeadlineAdmission", "FairShareAdmission",
+    "GenerateService", "RequestMetrics", "ServiceConfig", "ServiceMetrics",
+    "ServiceStream", "make_policy", "percentile",
+]

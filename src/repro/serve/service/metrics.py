@@ -1,0 +1,126 @@
+"""Service observability: per-request latency records + rolling aggregates.
+
+The service layer is where latency *distributions* first exist — the
+engine only ever sees one step at a time.  :class:`ServiceMetrics` collects
+one :class:`RequestMetrics` per finished request (TTFT, queue wait,
+inter-token gaps, finish reason) plus counters for the outcomes that never
+reach the engine (backpressure rejections) or never produce a token
+(sheds), and serves rolling p50/p99 aggregates over a bounded window so a
+long-lived server's memory stays O(window), not O(requests served).
+
+All mutation happens on the service's engine thread; ``snapshot()`` is
+called from the asyncio side and takes the lock so a reader never sees a
+half-updated window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], p: float) -> Optional[float]:
+    """Nearest-rank percentile (p in [0, 100]); None on empty input.
+    Nearest-rank (not interpolated) so a reported p99 is always a latency
+    some real request actually experienced."""
+    if not xs:
+        return None
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, -(-int(p) * len(s) // 100) - 1))
+    return s[k]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMetrics:
+    """One request's latency record, frozen at finish time."""
+
+    request_id: str
+    tenant: str
+    priority: int
+    finish_reason: str                  # stop | length | cancelled | shed
+    n_tokens: int
+    ttft_s: Optional[float]             # None when no token was produced
+    queue_wait_s: Optional[float]       # None when never admitted (shed)
+    itl_s: List[float]                  # inter-token gaps (len n_tokens - 1)
+
+    @property
+    def itl_mean_s(self) -> Optional[float]:
+        return sum(self.itl_s) / len(self.itl_s) if self.itl_s else None
+
+
+class ServiceMetrics:
+    """Rolling service-level aggregates + outcome counters."""
+
+    def __init__(self, window: int = 1024):
+        self._lock = threading.Lock()
+        self.window = window
+        self.n_submitted = 0
+        self.n_completed = 0            # finish_reason stop | length
+        self.n_cancelled = 0
+        self.n_shed = 0                 # policy rejections (admission layer)
+        self.n_rejected = 0             # backpressure rejections (never a
+        #                                 Request: max_pending was hit)
+        self.n_tokens = 0
+        self._ttft: Deque[float] = deque(maxlen=window)
+        self._itl: Deque[float] = deque(maxlen=window)
+        self._queue_wait: Deque[float] = deque(maxlen=window)
+        self.records: Deque[RequestMetrics] = deque(maxlen=window)
+
+    # -- engine-thread writers ----------------------------------------------
+
+    def on_submitted(self) -> None:
+        with self._lock:
+            self.n_submitted += 1
+
+    def on_rejected(self) -> None:
+        with self._lock:
+            self.n_rejected += 1
+
+    def observe(self, rm: RequestMetrics) -> None:
+        with self._lock:
+            self.records.append(rm)
+            if rm.finish_reason in ("stop", "length"):
+                self.n_completed += 1
+            elif rm.finish_reason == "cancelled":
+                self.n_cancelled += 1
+            elif rm.finish_reason == "shed":
+                self.n_shed += 1
+            self.n_tokens += rm.n_tokens
+            if rm.ttft_s is not None:
+                self._ttft.append(rm.ttft_s)
+            if rm.queue_wait_s is not None:
+                self._queue_wait.append(rm.queue_wait_s)
+            self._itl.extend(rm.itl_s)
+
+    # -- readers -------------------------------------------------------------
+
+    def snapshot(self) -> Dict:
+        """One consistent view: counters + rolling p50/p99 latency
+        aggregates (seconds).  The shape here is the shape the bench
+        records and ``launch/serve.py --service`` print."""
+        with self._lock:
+            return {
+                "submitted": self.n_submitted,
+                "completed": self.n_completed,
+                "cancelled": self.n_cancelled,
+                "shed": self.n_shed,
+                "rejected": self.n_rejected,
+                "tokens": self.n_tokens,
+                "ttft_s": self._stats(self._ttft),
+                "itl_s": self._stats(self._itl),
+                "queue_wait_s": self._stats(self._queue_wait),
+            }
+
+    @staticmethod
+    def _stats(xs: Sequence[float]) -> Dict[str, Optional[float]]:
+        xs = list(xs)
+        mean = sum(xs) / len(xs) if xs else None
+        return {
+            "n": len(xs),
+            "mean": mean,
+            "p50": percentile(xs, 50),
+            "p99": percentile(xs, 99),
+            "max": max(xs) if xs else None,
+        }

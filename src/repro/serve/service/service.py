@@ -1,0 +1,341 @@
+"""Asyncio generate service: many concurrent clients, one engine thread.
+
+This is the host-runtime half the source paper's OpenCL host stood for,
+grown to a real serving front-end (cf. SHARK's ``BatchGenerateService`` /
+``WorkQueue``): the synchronous :class:`ServingEngine` drive loop runs on a
+dedicated background thread, and an asyncio boundary multiplexes any number
+of concurrent clients over it.
+
+    client coroutines                     engine thread
+    -----------------                     -------------
+    await submit(...) --- _Command ---->  submit_request()
+    async for tok     <-- call_soon ----  step() -> pump(): per-request
+    aclose()/Cancelled -- _Command ---->  cancel(): pages + dense slots
+                                          freed, stream ends "cancelled"
+
+Every client holds a :class:`ServiceStream` — an ``AsyncIterator[int]``
+backed by its own ``asyncio.Queue``.  The engine thread is the ONLY thread
+that touches engine/scheduler/pool state (the thread-safe boundary is the
+command queue, not locks inside the engine); it pushes sampled tokens into
+the per-client queues via ``loop.call_soon_threadsafe``.
+
+Backpressure is a bounded admission queue: at most ``max_pending``
+requests may be in flight (submitted, not yet finished); beyond that
+``submit()`` raises :class:`AdmissionRejected` with a reason string rather
+than queueing unboundedly — overload surfaces at the caller in O(1), not
+as an ever-growing TTFT tail.  WHICH waiting requests the scheduler admits
+first (and which it sheds) is the pluggable admission policy's call
+(``admission.py``); shed requests end their stream with zero tokens and
+``finish_reason == "shed"``.
+
+Token-for-token parity: the service changes *when* requests enter the
+scheduler, never the math — a stream's tokens are exactly what
+``api.generate()`` returns for the same prompt/params.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import queue
+import threading
+import time
+from typing import AsyncIterator, List, Optional, Sequence, Tuple
+
+from repro.serve.engine.api import Completion, completion_of
+from repro.serve.engine.engine import ServingEngine
+from repro.serve.engine.request import Request, SamplingParams
+from repro.serve.service.admission import make_policy
+from repro.serve.service.metrics import RequestMetrics, ServiceMetrics
+
+
+class AdmissionRejected(RuntimeError):
+    """Backpressure rejection: the request never entered the engine."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    max_pending: int = 64        # in-flight bound (submitted, not finished)
+    admission: str = "fifo"      # fifo | deadline | fair_share
+    # deadline policy's prefill-time estimate (shed earlier than the bare
+    # deadline by this much); ignored by the other policies
+    est_ttft_s: float = 0.0
+    idle_wait_s: float = 0.002   # engine-thread sleep when no work/commands
+
+    def __post_init__(self):
+        if self.max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1: {self.max_pending}")
+
+
+class ServiceStream:
+    """One client's token stream: ``async for tok in stream``.
+
+    Ends via StopAsyncIteration with :attr:`completion` populated
+    (``finish_reason`` tells length/stop from shed).  Abandoning the
+    stream — ``await stream.aclose()``, or the consuming task being
+    cancelled mid-``__anext__`` (client disconnect) — cancels the request
+    on the engine thread, freeing its KV pages and dense slots.
+    """
+
+    def __init__(self, service: "GenerateService", req: Request):
+        self._service = service
+        self.request = req
+        self.request_id = req.request_id
+        self._q: asyncio.Queue = asyncio.Queue()
+        self.completion: Optional[Completion] = None
+        self._done = False
+
+    def __aiter__(self) -> AsyncIterator[int]:
+        return self
+
+    async def __anext__(self) -> int:
+        if self._done:
+            raise StopAsyncIteration
+        try:
+            kind, payload = await self._q.get()
+        except asyncio.CancelledError:
+            # consuming task cancelled == client disconnected: release the
+            # engine-side resources instead of generating headless
+            self._disconnect()
+            raise
+        if kind == "tok":
+            return payload
+        self._done = True
+        if kind == "err":
+            raise payload
+        self.completion = payload
+        raise StopAsyncIteration
+
+    async def aclose(self) -> None:
+        """Explicit disconnect (the async analogue of closing
+        ``engine.stream()``'s generator)."""
+        self._disconnect()
+
+    async def drain(self) -> Tuple[List[int], Completion]:
+        """Consume the whole stream; returns (tokens, completion)."""
+        toks = [t async for t in self]
+        assert self.completion is not None
+        return toks, self.completion
+
+    def _disconnect(self) -> None:
+        if not self._done and self.completion is None:
+            self._service._cancel(self.request_id)
+
+    # engine thread -> client queue (must hop through the loop)
+    def _push(self, item) -> None:
+        self._service._loop.call_soon_threadsafe(self._q.put_nowait, item)
+
+
+class _StreamState:
+    """Engine-thread-side bookkeeping for one live stream."""
+
+    __slots__ = ("handle", "emitted", "tok_times")
+
+    def __init__(self, handle: ServiceStream):
+        self.handle = handle
+        self.emitted = 0
+        self.tok_times: List[float] = []
+
+
+class GenerateService:
+    """Async front-end owning the engine drive loop on a background thread.
+
+    Use as an async context manager (or ``await start()`` / ``stop()``)::
+
+        async with GenerateService(engine, ServiceConfig(...)) as svc:
+            stream = await svc.submit(prompt, max_tokens=32,
+                                      ttft_deadline_s=0.5)
+            async for tok in stream:
+                ...
+            print(stream.completion.finish_reason, svc.metrics.snapshot())
+    """
+
+    def __init__(self, engine: ServingEngine,
+                 config: Optional[ServiceConfig] = None, *,
+                 policy=None, metrics: Optional[ServiceMetrics] = None):
+        self.engine = engine
+        self.config = config or ServiceConfig()
+        self.metrics = metrics or ServiceMetrics()
+        if policy is None:
+            kw = {"est_ttft_s": self.config.est_ttft_s} \
+                if self.config.admission == "deadline" else {}
+            policy = make_policy(self.config.admission, **kw)
+        self.policy = policy
+        engine.scheduler.admission = policy     # install the scheduler hook
+        self._cmd: "queue.Queue[Tuple[str, object]]" = queue.Queue()
+        self._streams: dict = {}                # engine-thread owned
+        # in-flight counter crosses threads: incremented at submit (loop
+        # side), decremented at finalize (engine side) BEFORE the "end"
+        # sentinel is pushed — so when a client sees its stream end, the
+        # freed slot is already visible to its next submit()
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._wake = threading.Event()
+        self._error: Optional[BaseException] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "GenerateService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._loop = asyncio.get_running_loop()
+        self._thread = threading.Thread(target=self._run,
+                                        name="engine-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    async def stop(self) -> None:
+        """Stop the engine thread; outstanding streams end 'cancelled'."""
+        if self._thread is None:
+            return
+        self._stop_evt.set()
+        self._wake.set()
+        await asyncio.get_running_loop().run_in_executor(
+            None, self._thread.join)
+        self._thread = None
+        if self._error is not None:
+            raise self._error
+
+    async def __aenter__(self) -> "GenerateService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- client face ---------------------------------------------------------
+
+    async def submit(self, prompt: Sequence[int], *,
+                     max_tokens: int = 16, temperature: float = 0.0,
+                     eos_token_id: Optional[int] = None, seed: int = 0,
+                     priority: int = 0, tenant: str = "default",
+                     ttft_deadline_s: Optional[float] = None) -> ServiceStream:
+        """Submit one request; returns its async token stream.
+
+        Raises :class:`AdmissionRejected` under backpressure (max_pending
+        in-flight requests) and ValueError when the request can never fit
+        the engine — both surface HERE, before the engine thread is
+        involved.  The TTFT/queue-wait clock starts now, so command-queue
+        latency is part of the measured service latency.
+        """
+        if self._thread is None:
+            raise RuntimeError("service not started")
+        with self._inflight_lock:
+            if self._inflight >= self.config.max_pending:
+                self.metrics.on_rejected()
+                raise AdmissionRejected(
+                    f"max_pending={self.config.max_pending} requests "
+                    f"in flight")
+            self._inflight += 1
+        try:
+            req = Request(prompt,
+                          SamplingParams(max_tokens=max_tokens,
+                                         temperature=temperature,
+                                         eos_token_id=eos_token_id,
+                                         seed=seed),
+                          priority=priority, tenant=tenant,
+                          ttft_deadline_s=ttft_deadline_s)
+            self.engine.check_request(req)    # pure read: safe off-thread
+        except Exception:
+            self._finished()                  # invalid: slot never used
+            raise
+        req.submit_t = time.perf_counter()
+        handle = ServiceStream(self, req)
+        self.metrics.on_submitted()
+        self._send(("submit", handle))
+        return handle
+
+    def _cancel(self, request_id: str) -> None:
+        self._send(("cancel", request_id))
+
+    def _send(self, cmd: Tuple[str, object]) -> None:
+        self._cmd.put(cmd)
+        self._wake.set()
+
+    def _finished(self) -> None:
+        """Free one in-flight slot (engine thread at finalize, or the
+        submit() error path).  Runs BEFORE the end-of-stream sentinel so a
+        client that saw its stream end can immediately submit again."""
+        with self._inflight_lock:
+            self._inflight -= 1
+
+    # -- engine thread -------------------------------------------------------
+
+    def _run(self) -> None:
+        try:
+            while not self._stop_evt.is_set():
+                self._drain_commands()
+                progressed = False
+                if self.engine.scheduler.has_work:
+                    progressed = self.engine.step()
+                self._pump()
+                if not progressed and self._cmd.empty():
+                    self._wake.wait(timeout=self.config.idle_wait_s)
+                    self._wake.clear()
+        except BaseException as e:          # surface on stop() and streams
+            self._error = e
+        finally:
+            self._shutdown_streams()
+
+    def _drain_commands(self) -> None:
+        while True:
+            try:
+                op, arg = self._cmd.get_nowait()
+            except queue.Empty:
+                return
+            if op == "submit":
+                handle: ServiceStream = arg
+                self.engine.submit_request(handle.request)
+                self._streams[handle.request_id] = _StreamState(handle)
+            elif op == "cancel":
+                self.engine.cancel(arg)     # no-op if already finished
+
+    def _pump(self) -> None:
+        """Forward newly sampled tokens to their client queues; finalize
+        finished requests (metrics record + end-of-stream sentinel)."""
+        now = time.perf_counter()
+        done = []
+        for rid, st in self._streams.items():
+            r = st.handle.request
+            while st.emitted < len(r.output_tokens):
+                st.tok_times.append(now)
+                st.handle._push(("tok", r.output_tokens[st.emitted]))
+                st.emitted += 1
+            if r.is_finished:
+                done.append(rid)
+        for rid in done:
+            st = self._streams.pop(rid)
+            r = st.handle.request
+            comp = completion_of(r)
+            itl = [b - a for a, b in zip(st.tok_times, st.tok_times[1:])]
+            self.metrics.observe(RequestMetrics(
+                request_id=r.request_id, tenant=r.tenant,
+                priority=r.priority, finish_reason=comp.finish_reason,
+                n_tokens=len(comp.tokens), ttft_s=comp.ttft_s,
+                queue_wait_s=comp.queue_wait_s, itl_s=itl))
+            self._finished()
+            st.handle._push(("end", comp))
+
+    def _shutdown_streams(self) -> None:
+        """Engine-thread exit: cancel whatever is still live so pages and
+        dense slots return to their pools, then flush the final pumps."""
+        for rid in list(self._streams):
+            try:
+                self.engine.cancel(rid)
+            except Exception:
+                pass
+        try:
+            self._pump()
+        except Exception:
+            pass
+        # anything STILL unfinished (cancel failed) gets an error sentinel
+        err = self._error or RuntimeError("service stopped")
+        for st in self._streams.values():
+            st.handle._push(("err", err))
+        self._streams.clear()

@@ -1,0 +1,184 @@
+"""Admission-policy units: the scheduler hook + the three policies.
+
+Host-only (no mesh): the scheduler is driven directly with a fake clock so
+deadline feasibility and queue-wait stamps are deterministic.
+"""
+
+import pytest
+
+from repro.serve.engine.block_cache import BlockPool
+from repro.serve.engine.request import Request, RequestState, SamplingParams
+from repro.serve.engine.scheduler import (FifoAdmission, Scheduler,
+                                          SchedulerConfig)
+from repro.serve.service.admission import (DeadlineAdmission,
+                                           FairShareAdmission, make_policy)
+
+
+class FakeClock:
+    def __init__(self, t=100.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _sched(policy=None, clock=None, n_blocks=64, stride=2, buckets=(1, 2, 4)):
+    return Scheduler(BlockPool(n_blocks, stride), SchedulerConfig(buckets),
+                     admission=policy, clock=clock or FakeClock())
+
+
+def _req(prompt_len=2, submit_t=100.0, **kw):
+    r = Request(list(range(1, prompt_len + 1)),
+                SamplingParams(max_tokens=4), **kw)
+    r.submit_t = submit_t
+    return r
+
+
+def test_make_policy_registry():
+    assert isinstance(make_policy("fifo"), FifoAdmission)
+    assert isinstance(make_policy("deadline"), DeadlineAdmission)
+    assert isinstance(make_policy("fair_share"), FairShareAdmission)
+    assert make_policy("deadline", est_ttft_s=0.25).est_ttft_s == 0.25
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        make_policy("edf")
+    with pytest.raises(ValueError, match="est_ttft_s"):
+        DeadlineAdmission(est_ttft_s=-1.0)
+
+
+def test_request_slo_metadata_and_validation():
+    r = _req(priority=3, tenant="t0", ttft_deadline_s=0.5)
+    assert (r.priority, r.tenant, r.ttft_deadline_s) == (3, "t0", 0.5)
+    assert r.deadline_t == 100.5
+    f = r.fork()
+    assert (f.priority, f.tenant, f.ttft_deadline_s) == (3, "t0", 0.5)
+    with pytest.raises(ValueError, match="ttft_deadline_s"):
+        Request([1], ttft_deadline_s=0.0)
+
+
+def test_queue_wait_stamped_at_first_admission_only():
+    clock = FakeClock(100.0)
+    s = _sched(clock=clock, n_blocks=4, buckets=(1, 2))
+    a, b = _req(submit_t=90.0), _req(submit_t=95.0)
+    s.submit(a)
+    s.submit(b)
+    clock.t = 101.0
+    s.schedule()
+    assert a.queue_wait_s == pytest.approx(11.0)
+    assert b.queue_wait_s == pytest.approx(6.0)
+    # preemption + re-admission must NOT restamp: queue wait measures the
+    # submit->first-service interval, not scheduling churn
+    s._evict(b)
+    clock.t = 107.0
+    s.schedule()
+    assert b.queue_wait_s == pytest.approx(6.0)
+
+
+def test_fifo_head_of_line_blocks_younger_requests():
+    # pool of 3 blocks (stride 2): the 5-token head needs 3, the running
+    # request holds 2 -> head blocked, and FIFO must NOT admit the
+    # 1-block youngster behind it
+    s = _sched(n_blocks=4, buckets=(1, 2))
+    first = _req(prompt_len=2)
+    s.submit(first)
+    s.schedule()                      # first running: holds 2 blocks
+    big = _req(prompt_len=5)          # needs 3 blocks > 2 free
+    small = _req(prompt_len=1)        # would fit in 1
+    s.submit(big)
+    s.submit(small)
+    sd = s.schedule()
+    assert sd.admitted == []          # head-of-line: nobody jumps the queue
+    assert list(s.waiting) == [big, small]
+
+
+def test_deadline_selects_edf_and_skips_blocked():
+    clock = FakeClock(100.0)
+    s = _sched(policy=DeadlineAdmission(), clock=clock,
+               n_blocks=4, buckets=(1, 2))
+    first = _req(prompt_len=2)
+    s.submit(first)
+    s.schedule()
+    # EDF order: urgent (deadline 100.4) before lax (100.9) before
+    # best-effort (none); the blocked big request does not stall the rest
+    big = _req(prompt_len=5, ttft_deadline_s=0.4)        # blocked: 3 > 2 free
+    lax = _req(prompt_len=1, ttft_deadline_s=0.9)
+    s.submit(big)
+    s.submit(lax)
+    sd = s.schedule()
+    assert sd.admitted == [lax]       # big is capacity-blocked, lax skips it
+    assert big in s.waiting
+
+
+def test_deadline_sheds_infeasible_requests():
+    clock = FakeClock(100.0)
+    s = _sched(policy=DeadlineAdmission(est_ttft_s=0.1), clock=clock)
+    doomed = _req(ttft_deadline_s=0.5)     # absolute deadline 100.5
+    fine = _req(ttft_deadline_s=5.0)
+    noslo = _req()
+    for r in (doomed, fine, noslo):
+        s.submit(r)
+    clock.t = 100.45                       # 100.45 + 0.1 > 100.5: infeasible
+    sd = s.schedule()
+    assert sd.shed == [doomed]
+    assert doomed.state == RequestState.FINISHED
+    assert doomed.finish_reason == "shed"
+    assert doomed.queue_wait_s is None and doomed.output_tokens == []
+    assert s.n_shed == 1
+    assert {r.request_id for r in s.running} == \
+        {fine.request_id, noslo.request_id}
+
+
+def test_fair_share_round_robins_tenants():
+    s = _sched(policy=FairShareAdmission(), buckets=(1, 2, 4))
+    a1, a2, a3 = (_req(tenant="a") for _ in range(3))
+    b1 = _req(tenant="b")
+    for r in (a1, a2, a3, b1):        # tenant a submitted a burst first
+        s.submit(r)
+    s.config = SchedulerConfig((1, 2))     # cap capacity at 2
+    sd = s.schedule()
+    # round-robin: one from each tenant, NOT a's whole burst
+    assert set(sd.admitted) == {a1, b1}
+    assert list(s.waiting) == [a2, a3]
+
+
+def test_fair_share_priority_preempts_lower_priority_running():
+    s = _sched(policy=FairShareAdmission(), buckets=(1, 2))
+    lo1, lo2 = _req(priority=0), _req(priority=0)
+    s.submit(lo1)
+    s.submit(lo2)
+    s.schedule()                      # both running: batch is full
+    hi = _req(priority=5)
+    s.submit(hi)
+    sd = s.schedule()
+    assert hi in sd.admitted
+    # the YOUNGEST lowest-priority victim was evicted back to waiting
+    assert sd.preempted == [lo2]
+    assert lo2.state == RequestState.WAITING and lo2.n_preemptions == 1
+    assert s.n_preemptions == 1
+    assert lo1 in s.running and hi in s.running
+
+
+def test_fair_share_never_preempts_equal_priority():
+    s = _sched(policy=FairShareAdmission(), buckets=(1, 2))
+    a, b = _req(priority=1), _req(priority=1)
+    s.submit(a)
+    s.submit(b)
+    s.schedule()
+    c = _req(priority=1)
+    s.submit(c)
+    sd = s.schedule()
+    assert sd.admitted == [] and sd.preempted == []
+    assert c in s.waiting
+
+
+def test_shed_requests_free_nothing_and_scheduler_stays_consistent():
+    """Shedding from WAITING touches no pool state (nothing was allocated)
+    and an all-shed queue leaves the scheduler idle."""
+    clock = FakeClock(100.0)
+    s = _sched(policy=DeadlineAdmission(), clock=clock)
+    r = _req(ttft_deadline_s=0.1)
+    s.submit(r)
+    clock.t = 101.0
+    assert s.schedule() is None       # shed, then nothing to run
+    assert r.finish_reason == "shed"
+    assert s.pool.n_free == s.pool.n_blocks
+    assert not s.has_work

@@ -279,3 +279,47 @@ def test_submit_validation(mesh16, plan16):
         eng.submit(list(range(30)), SamplingParams(max_tokens=8))  # > s_max
     with pytest.raises(ValueError):
         eng.submit([], SamplingParams(max_tokens=1))
+
+
+def test_stream_generator_exit_under_pallas_interpret(mesh16, plan16):
+    """Abandoning stream() mid-flight (GeneratorExit) under the explicit
+    pallas-interpret backend cancels the request and frees its pages — the
+    interpreted fused-kernel path shares the XLA path's lifecycle hooks —
+    and the engine keeps serving, with the abandoned stream's tokens being
+    a prefix of a clean run's."""
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=4,
+                      kernel_backend="pallas-interpret")
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, seed=0)
+    prompt = list(range(1, 6))
+    gen = eng.stream(prompt, SamplingParams(max_tokens=10))
+    got = [next(gen), next(gen), next(gen)]
+    gen.close()
+    assert not eng.scheduler.has_work
+    assert eng.pool.n_free == eng.pool.n_blocks
+    ref = generate(eng, [prompt], SamplingParams(max_tokens=10))[0]
+    assert ref.tokens[:3] == got
+
+
+def test_two_interleaved_stream_consumers_match_generate(mesh16, plan16):
+    """Two stream() generators consumed in strict alternation: each
+    next() drives the WHOLE engine, so both requests batch together and
+    still emit exactly the single-shot reference tokens."""
+    B, plen, n_tok = 2, 5, 6
+    prompts = np.random.default_rng(7).integers(
+        0, CFG.vocab_size, size=(B, plen)).astype(np.int32)
+    expect, params_d = _single_shot_greedy(mesh16, plan16, prompts, n_tok)
+
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=4)
+    eng = build_engine(CFG, mesh16, plan16, engine_cfg=ec, params=params_d)
+    g0 = eng.stream(prompts[0].tolist(), SamplingParams(max_tokens=n_tok))
+    g1 = eng.stream(prompts[1].tolist(), SamplingParams(max_tokens=n_tok))
+    out = [[], []]
+    for _ in range(n_tok):
+        out[0].append(next(g0))
+        out[1].append(next(g1))
+    for g in (g0, g1):
+        with pytest.raises(StopIteration):
+            next(g)
+    assert out[0] == expect[0]
+    assert out[1] == expect[1]
+    assert eng.pool.n_free == eng.pool.n_blocks

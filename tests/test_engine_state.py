@@ -322,3 +322,32 @@ def test_dense_slot_pool_alloc_release():
     with pytest.raises(ValueError):
         pool.release(a)                                      # double free
     assert pool.alloc() == a
+
+
+def test_cancel_mid_stream_returns_dense_slots_to_pool(mesh16, plan16):
+    """Cancellation audit: a request holding DenseSpec slots (SSM config)
+    must return its slot to the StateStore pool on BOTH abandonment paths
+    — stream() GeneratorExit and explicit engine.cancel() — leaving slot
+    and block occupancy at zero."""
+    cfg = _ssm_cfg()
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=4)
+    eng = build_engine(cfg, mesh16, plan16, engine_cfg=ec, seed=0)
+    slots = eng.store.slot_pool
+    assert slots is not None                   # SSM config => dense slots
+    prompt = list(range(1, 7))
+
+    gen = eng.stream(prompt, SamplingParams(max_tokens=8))
+    assert [next(gen), next(gen)] is not None  # mid-stream, slot held
+    assert slots.n_used == 1
+    gen.close()                                # client walks away
+    assert slots.n_used == 0
+    assert eng.pool.n_free == eng.pool.n_blocks
+
+    r = eng.submit(prompt, SamplingParams(max_tokens=8))
+    eng.step()
+    assert slots.n_used == 1
+    assert eng.cancel(r.request_id)
+    assert r.finish_reason == "cancelled"
+    assert slots.n_used == 0
+    assert eng.pool.n_free == eng.pool.n_blocks
+    assert not eng.scheduler.has_work
