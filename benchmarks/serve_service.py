@@ -201,6 +201,104 @@ def run(report, *, rate=None, requests=64, seed=0, admission=None,
     return p99_by_cell
 
 
+def run_speculation(report, *, requests=8, rate=16.0, seed=0, config=None,
+                    json_path="auto", timestamp=None, smoke=False):
+    """Paired open-loop passes (speculation off / n-gram drafter) over one
+    repetitive workload: the SERVICE-level view of speculative decoding.
+
+    ``serve_throughput.py --speculation`` owns the closed-loop >= 2x claim;
+    this pass shows what concurrent streaming clients see — the metrics
+    snapshot's ``speculation`` counters (proposed / accepted / accept_rate,
+    folded in per pump from EngineStats deltas) and the per-request decode
+    token rate — and appends one record per cell so the trajectory holds
+    the off/ngram pair under identical Poisson arrivals."""
+    from serve_throughput import _spec_workload
+    from repro.kernels import default_kernel_backend
+    from repro.serve.spec import SpeculationConfig
+    if json_path == "auto":
+        json_path = None if smoke else JSON_PATH
+    kernel_backend = default_kernel_backend()
+    cfg = _bench_config("spec-bench" if config in (None, "srv-bench")
+                        else config)
+    mesh = jax.make_mesh((1, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+    spec_k, ngram_max = 6, 3
+    plen, tail = (12, 8) if smoke else (32, 24)
+    max_tokens = 16 if smoke else 32
+    s_max = -(-(4 + plen + max_tokens + 8) // 16) * 16
+    prompts = _spec_workload(cfg, mesh, plan, kernel_backend,
+                             np.random.default_rng(seed), requests, plen,
+                             tail, spec_k, ngram_max, s_max)
+    n_toks = [max_tokens] * requests
+
+    ts = timestamp or datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    outs = {}
+    for label, speculation in (
+            ("off", None),
+            ("ngram", SpeculationConfig(drafter="ngram", k=spec_k,
+                                        ngram_max=ngram_max))):
+        ec = EngineConfig(s_max=s_max, buckets=(1, 2, 4, 8),
+                          block_pos_stride=8, speculation=speculation)
+        eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
+        # untimed closed-loop pass compiles every executable (incl.
+        # verify_bs{N}) so the open-loop pass doesn't charge XLA to TTFT
+        generate(eng, prompts, SamplingParams(max_tokens=max_tokens))
+        results, snap = asyncio.run(_drive(
+            eng, admission="fifo", est_ttft_s=0.0, prompts=prompts,
+            n_toks=n_toks, rate=rate, arrival_seed=seed + 1,
+            ttft_slo_s=None, max_pending=requests))
+        _check_invariants(results, snap)
+        comps = [comp for r in results if r is not None for _, comp in [r]]
+        # request ids keep counting across engines; pair streams by prompt
+        outs[label] = sorted((tuple(c.prompt), tuple(c.tokens))
+                             for c in comps)
+        dec = [c.decode_tok_s for c in comps if c.decode_tok_s is not None]
+        dec_mean = float(np.mean(dec)) if dec else 0.0
+        spec_snap = snap["speculation"]
+        tag = f"service.spec.{label}"
+        report(f"{tag}.decode_tok_s_mean", f"{dec_mean:.1f}",
+               f"per-request decode rate over {len(dec)} streaming clients")
+        if speculation is not None:
+            ar = spec_snap["accept_rate"]
+            report(f"{tag}.accept_rate",
+                   f"{ar:.2f}" if ar is not None else "n/a",
+                   f"{spec_snap['accepted']}/{spec_snap['proposed']} draft "
+                   f"tokens accepted (service metrics snapshot)")
+        if json_path:
+            n = _append_trajectory(json_path, {
+                "bench": "serve_service",
+                "mode": "speculation",
+                "speculation": label,
+                "config": cfg.name,
+                "admission": "fifo",
+                "rate_per_s": rate,
+                "requests": requests,
+                "seed": seed,
+                "timestamp": ts,
+                "completed": snap["completed"],
+                "tokens": snap["tokens"],
+                "decode_tok_s_mean": round(dec_mean, 2),
+                "proposed_tokens": spec_snap["proposed"],
+                "accepted_tokens": spec_snap["accepted"],
+                "rejected_tokens": spec_snap["rejected"],
+                "accept_rate": round(spec_snap["accept_rate"], 4)
+                if spec_snap["accept_rate"] is not None else None,
+                **{key: {s: (round(v, 5) if isinstance(v, float) else v)
+                         for s, v in snap[key].items()}
+                   for key in ("ttft_s", "itl_s")},
+            })
+            report(f"{tag}.json", os.path.relpath(json_path),
+                   f"trajectory appended ({n} records)")
+    # same engine seed + greedy sampling: the streams must pair up exactly
+    if outs["off"] != outs["ngram"]:
+        raise RuntimeError("speculative service streams diverged from "
+                           "non-speculative greedy streams")
+    report("service.spec.greedy_parity", "ok",
+           "streamed tokens identical with speculation off/ngram")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rate", type=float, default=None,
@@ -226,12 +324,28 @@ def main():
                     help="append records to this path (default: "
                          "BENCH_serve.json on full sweeps; single-rate "
                          "runs don't touch the trajectory)")
+    ap.add_argument("--speculation", action="store_true",
+                    help="run the paired off/ngram open-loop pass instead "
+                         "of the admission sweep: same repetitive workload "
+                         "as serve_throughput --speculation, records the "
+                         "service metrics snapshot's speculation counters "
+                         "(--rate makes it a trajectory-free smoke)")
     args = ap.parse_args()
     print("name,value,derived")
 
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
+    if args.speculation:
+        run_speculation(
+            report, rate=args.rate or 16.0, seed=args.seed,
+            config=args.config, json_path=args.json or "auto",
+            timestamp=args.timestamp,
+            # --requests keeps its sweep default of 64, far too many for
+            # the paired pass; only an explicit override applies
+            requests=args.requests if args.requests != 64 else 8,
+            smoke=args.rate is not None)
+        return
     run(report, rate=args.rate, requests=args.requests, seed=args.seed,
         admission=args.admission, config=args.config,
         ttft_slo_s=args.ttft_slo, json_path=args.json or "auto",

@@ -73,6 +73,14 @@ def main():
                     help="step-kernel backend for --engine (default: "
                          "REPRO_KERNEL_BACKEND or jnp); pallas reads KV "
                          "pages in place inside the fused kernel")
+    ap.add_argument("--speculation", default="off",
+                    choices=["off", "ngram", "draft_model"],
+                    help="speculative decoding for --engine/--service: "
+                         "draft k tokens per slot (prompt-lookup or a "
+                         "second draft-model CommandQueue) and verify them "
+                         "in one verify_bs{N} launch")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per slot per verify launch")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -134,6 +142,14 @@ def _build_engine(cfg, mesh, plan, args):
     chunks = tuple(int(c) for c in args.prefill_chunks.split(",") if c)
     ec_kw = {} if args.kernel_backend is None \
         else {"kernel_backend": args.kernel_backend}
+    if getattr(args, "speculation", "off") != "off":
+        from repro.serve.spec import SpeculationConfig
+        ec_kw["speculation"] = SpeculationConfig(
+            drafter=args.speculation, k=args.spec_k,
+            # self-drafting default: the reduced target config itself runs
+            # on the draft queue (vocabs match by construction)
+            draft_config=args.arch if args.speculation == "draft_model"
+            else None)
     return build_engine(cfg, mesh, plan, seed=0,
                         engine_cfg=EngineConfig(s_max=s_max, buckets=buckets,
                                                 block_pos_stride=stride,
@@ -169,10 +185,18 @@ def _main_engine(cfg, mesh, plan, args):
     # launches != tokens since chunked prefill: one prefill_bs{N}_len{L}
     # enqueue ingests up to L prompt tokens per slot
     ttft_ms = f"{np.mean(ttfts) * 1e3:.1f} ms" if ttfts else "n/a"
+    tpl = st.tokens_generated / max(st.launches, 1)
     print(f"  prefill: {st.prompt_tokens_ingested} prompt tokens ingested "
           f"in {st.prefill_launches} launches "
           f"({st.prefill_chunk_launches} chunked); "
-          f"decode: {st.decode_launches} launches; mean TTFT {ttft_ms}")
+          f"decode: {st.decode_launches} launches; "
+          f"{tpl:.2f} tokens/launch; mean TTFT {ttft_ms}")
+    if st.spec_launches:
+        print(f"  speculation: {st.spec_launches} verify launches, "
+              f"{st.spec_proposed_tokens} proposed / "
+              f"{st.spec_accepted_tokens} accepted "
+              f"(accept rate {st.spec_accept_rate:.2f}, "
+              f"{st.spec_rollbacks} rollbacks)")
 
 
 def _main_service(cfg, mesh, plan, args):

@@ -771,7 +771,8 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
 def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
                             batch: int, s_max: int, chunk: int,
                             paged: PagedKV,
-                            kernel_backend: Optional[str] = None):
+                            kernel_backend: Optional[str] = None,
+                            all_logits: bool = False):
     """Chunked multi-token prefill body: up to L tokens per slot per launch.
 
     The ``prefill_bs{N}_len{L}`` ABI (gemv layout, engine state arena):
@@ -800,6 +801,18 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
     selects both the paged-attention kernel (gathered copy vs fused
     in-place page reads) AND the SSD scan backend used by
     :func:`repro.models.ssm.mamba_chunk_step` for dense layers.
+
+    ``all_logits=True`` is the speculative-decoding **verify** variant of
+    the same ABI: logits come back ``(B, L, V)`` — one distribution per
+    chunk position — instead of the single last-valid row.  Position j's
+    logits are the target model's distribution over the token at position
+    ``pos + j + 1`` having attended to everything through ``pos + j``,
+    which is exactly what accept/reject sampling needs to judge draft
+    token j+1 (and row ``n_valid - 1`` is the bonus distribution).
+    Everything else — K/V scatter, causal masking, dense-state advance,
+    padding semantics past ``n_valid`` — is byte-for-byte the prefill
+    path; the default ``all_logits=False`` body is unchanged, so the
+    non-speculative executables stay bit-identical.
     """
     kernel_backend = kernel_backend if kernel_backend is not None \
         else default_kernel_backend()
@@ -841,11 +854,13 @@ def make_prefill_chunk_body(cfg: ModelConfig, mesh: Mesh, plan: MeshPlan, *,
         local_cache = jax.tree.map(lambda c: c[:, 0], cache)
         x, new_cache = lax.scan(group_body, x,
                                 (params["layers"], local_cache))
-        # extract each slot's last VALID chunk position before the final
-        # norm + lm_head (both are pointwise over positions, so the gather
-        # commutes and the vocab projection runs on 1 position, not L)
-        idx = jnp.clip(n_valid - 1, 0, x.shape[1] - 1)
-        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        if not all_logits:
+            # extract each slot's last VALID chunk position before the final
+            # norm + lm_head (both are pointwise over positions, so the
+            # gather commutes and the vocab projection runs on 1 position,
+            # not L)
+            idx = jnp.clip(n_valid - 1, 0, x.shape[1] - 1)
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         x = _norm(pctx, cfg, params["final_norm"], x)
         logits = _last_logits(pctx, params["lm_head"], x, gather_rows=False)
         new_cache = jax.tree.map(lambda c: c[:, None], new_cache)

@@ -28,6 +28,10 @@ class Completion:
     # submit-to-first-admission wait (None when never admitted — a request
     # shed from the waiting queue has queue_wait_s None AND zero tokens)
     queue_wait_s: Optional[float] = None
+    # steady-state decode rate excluding TTFT: (tokens - 1) over the
+    # first-token-to-finish span; None with < 2 tokens.  The per-request
+    # metric speculative decoding improves.
+    decode_tok_s: Optional[float] = None
 
 
 def completion_of(request) -> Completion:
@@ -40,7 +44,8 @@ def completion_of(request) -> Completion:
                       finish_reason=request.finish_reason or "length",
                       n_preemptions=request.n_preemptions,
                       ttft_s=request.ttft_s,
-                      queue_wait_s=request.queue_wait_s)
+                      queue_wait_s=request.queue_wait_s,
+                      decode_tok_s=request.decode_tok_s)
 
 
 def build_engine(cfg, mesh, plan, *, engine_cfg: Optional[EngineConfig] = None,

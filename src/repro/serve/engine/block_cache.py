@@ -301,6 +301,23 @@ class SequenceBlocks:
             self.pool.release(bid)
         self.ids = []
 
+    def rewind(self, n_tokens: int) -> int:
+        """Shrink the table to cover exactly ``n_tokens`` positions,
+        releasing the tail pages (newest first — the speculative-decoding
+        rollback).  Returns the number of pages released.  The rewound
+        pages' KV is NOT erased on device: a page that comes back through
+        ``ensure`` is freshly allocated (possibly a different physical id,
+        always a new generation), and any stale prefix entries for the
+        released pages die at reallocation via the generation counters —
+        stale KV inside still-held pages past ``n_tokens`` is causally
+        masked in-kernel, so attention rollback is pure host bookkeeping."""
+        keep = self.pool.blocks_for(n_tokens)
+        freed = 0
+        while len(self.ids) > keep:
+            self.pool.release(self.ids.pop())
+            freed += 1
+        return freed
+
     def fork(self) -> "SequenceBlocks":
         """Share this table with a sibling sequence (ref-count bump)."""
         child = SequenceBlocks(self.pool)

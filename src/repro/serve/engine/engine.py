@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterator, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -57,6 +57,9 @@ from repro.serve.engine.scheduler import (ScheduledStep, Scheduler,
                                           SchedulerConfig)
 from repro.serve.engine.state_store import StateStore
 from repro.serve.state import layer_state_specs
+
+if TYPE_CHECKING:                              # no import cycle at runtime:
+    from repro.serve.spec.config import SpeculationConfig  # pragma: no cover
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +82,10 @@ class EngineConfig:
     # forced — the CPU CI variant).  Default honors REPRO_KERNEL_BACKEND.
     kernel_backend: str = dataclasses.field(
         default_factory=default_kernel_backend)
+    # speculative decoding (repro.serve.spec): None = off.  When set, pure
+    # decode steps draft k tokens per slot and verify them in ONE
+    # ``verify_bs{N}_len{k+1}`` launch; k+1 must fit s_max.
+    speculation: Optional["SpeculationConfig"] = None
 
     def __post_init__(self):
         check_kernel_backend(self.kernel_backend)
@@ -108,6 +115,26 @@ class EngineStats:
     migrations: int = 0                   # host-side table permutations only
     peak_blocks_used: int = 0             # pool occupancy high-water mark
     peak_dense_slots_used: int = 0        # dense slot high-water mark
+    # speculative decoding (0 everywhere when speculation is off)
+    spec_launches: int = 0                # verify_bs{N}_len{L} launches
+    spec_proposed_tokens: int = 0         # draft tokens fed to verification
+    spec_accepted_tokens: int = 0         # of which the target accepted
+    spec_rejected_tokens: int = 0         # of which were rolled back
+    spec_rollbacks: int = 0               # partial-acceptance rewinds
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Accepted / proposed draft tokens (0.0 before any proposal)."""
+        if not self.spec_proposed_tokens:
+            return 0.0
+        return self.spec_accepted_tokens / self.spec_proposed_tokens
+
+    @property
+    def launches(self) -> int:
+        """Total step-kernel enqueues (decode + chunked/token prefill +
+        verify) — the denominator of tokens-per-launch."""
+        return self.decode_launches + self.prefill_launches \
+            + self.spec_launches
 
 
 class ServingEngine:
@@ -189,6 +216,12 @@ class ServingEngine:
         self._bucket: Optional[int] = None
         self._rngs: Dict[str, np.random.Generator] = {}
         self.stats = EngineStats()
+        self.spec = None
+        if ec.speculation is not None:
+            # deferred import: spec builds on the engine package, so a
+            # module-level import here would cycle through its __init__
+            from repro.serve.spec.decoder import SpecDecoder
+            self.spec = SpecDecoder(self, ec.speculation)
 
     # -- request intake ----------------------------------------------------
     #
@@ -252,6 +285,8 @@ class ServingEngine:
 
     def cancel(self, request_id: str) -> bool:
         self._rngs.pop(request_id, None)
+        if self.spec is not None:
+            self.spec.release(request_id)
         return self.scheduler.cancel(request_id)
 
     # -- per-bucket executables --------------------------------------------
@@ -331,6 +366,11 @@ class ServingEngine:
         self._note_migration(sd)
         B = sd.bucket
         chunk = self._chunk_len(sd.max_remaining)
+        # speculative decoding replaces the pure-decode launch when any
+        # slot yields a usable draft; on False (no drafts this round) the
+        # plain serve_step launch below runs unchanged
+        if chunk is None and self.spec is not None and self.spec.step(sd):
+            return True
         pos = np.zeros((B,), np.int32)
         has_pages = self.store.needs_pages
         has_dense = self.store.has_dense
@@ -418,6 +458,8 @@ class ServingEngine:
             if reason is not None:
                 self.scheduler.complete(r, reason)
                 self._rngs.pop(r.request_id, None)
+                if self.spec is not None:
+                    self.spec.release(r.request_id)
         self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
         return True
 
@@ -532,7 +574,8 @@ class ServingEngine:
 
     def kernel_events(self):
         return {name: ev for name, ev in self.queue.events.items()
-                if name.startswith(("serve_step_bs", "prefill_bs"))}
+                if name.startswith(("serve_step_bs", "prefill_bs",
+                                    "verify_bs"))}
 
     def throughput_tok_s(self) -> float:
         """Generated tokens / wall-span of step-kernel activity, derived

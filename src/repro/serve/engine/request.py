@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import List, Optional, Sequence
 
 
@@ -106,6 +107,7 @@ class Request:
         self.submit_t = 0.0
         self.first_token_t = 0.0
         self.admit_t = 0.0
+        self.finish_t = 0.0
 
     # -- sequence view -----------------------------------------------------
 
@@ -177,9 +179,22 @@ class Request:
                 f"{self.state} -> {new_state}")
         self.state = new_state
 
+    @property
+    def decode_tok_s(self) -> Optional[float]:
+        """Steady-state decode rate: tokens after the first, over the
+        first-token-to-finish span (None until finished with >= 2 tokens).
+        TTFT is excluded on purpose — this is the per-request metric
+        speculative decoding improves."""
+        if self.first_token_t and self.finish_t > self.first_token_t \
+                and len(self.output_tokens) >= 2:
+            return (len(self.output_tokens) - 1) \
+                / (self.finish_t - self.first_token_t)
+        return None
+
     def finish(self, reason: str) -> None:
         self.transition(RequestState.FINISHED)
         self.finish_reason = reason
+        self.finish_t = time.perf_counter()
 
     def preempt(self) -> None:
         """Back to WAITING, dropping cache progress (blocks freed by caller)."""

@@ -158,6 +158,17 @@ class StateStore:
         self.slot_pool.release(request.dense_slot)
         request.dense_slot = None
 
+    def restore_slot(self, slot: int, host_leaves: Dict) -> None:
+        """Overwrite a live slot's device rows with a host snapshot taken by
+        :meth:`read_slot` — the speculative-decoding rollback: a verify
+        launch advanced the slot's recurrent state through k+1 positions
+        unconditionally, and a partial acceptance rewinds it to the
+        pre-launch snapshot (re-fed accepted tokens then re-advance it
+        deterministically).  Unlike :meth:`commit_admit` the slot stays
+        bound to its request."""
+        self._write_slot(slot, host_leaves)
+        self.n_restores += 1
+
     # -- dense prefix snapshots (engine-side) -------------------------------
 
     def publish_dense_prefix(self, key: Tuple[int, ...], slot: int) -> None:

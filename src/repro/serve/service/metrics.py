@@ -63,6 +63,11 @@ class ServiceMetrics:
         self.n_rejected = 0             # backpressure rejections (never a
         #                                 Request: max_pending was hit)
         self.n_tokens = 0
+        # speculative decoding (stay 0 when the engine runs without it):
+        # lifetime draft-token counters mirrored from EngineStats deltas
+        self.n_spec_proposed = 0
+        self.n_spec_accepted = 0
+        self.n_spec_rejected = 0
         self._ttft: Deque[float] = deque(maxlen=window)
         self._itl: Deque[float] = deque(maxlen=window)
         self._queue_wait: Deque[float] = deque(maxlen=window)
@@ -77,6 +82,14 @@ class ServiceMetrics:
     def on_rejected(self) -> None:
         with self._lock:
             self.n_rejected += 1
+
+    def on_speculation(self, proposed: int, accepted: int,
+                       rejected: int) -> None:
+        """Fold one pump's EngineStats delta of draft-token outcomes in."""
+        with self._lock:
+            self.n_spec_proposed += proposed
+            self.n_spec_accepted += accepted
+            self.n_spec_rejected += rejected
 
     def observe(self, rm: RequestMetrics) -> None:
         with self._lock:
@@ -111,6 +124,14 @@ class ServiceMetrics:
                 "ttft_s": self._stats(self._ttft),
                 "itl_s": self._stats(self._itl),
                 "queue_wait_s": self._stats(self._queue_wait),
+                "speculation": {
+                    "proposed": self.n_spec_proposed,
+                    "accepted": self.n_spec_accepted,
+                    "rejected": self.n_spec_rejected,
+                    "accept_rate": (
+                        self.n_spec_accepted / self.n_spec_proposed
+                        if self.n_spec_proposed else None),
+                },
             }
 
     @staticmethod

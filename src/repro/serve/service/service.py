@@ -168,6 +168,10 @@ class GenerateService:
         engine.scheduler.admission = policy     # install the scheduler hook
         self._cmd: "queue.Queue[Tuple[str, object]]" = queue.Queue()
         self._streams: dict = {}                # engine-thread owned
+        # last-seen speculative EngineStats counters (engine-thread owned):
+        # _pump folds the deltas into ServiceMetrics so snapshots track
+        # acceptance live, even if the engine stats are reset between runs
+        self._spec_seen = (0, 0, 0)
         # in-flight counter crosses threads: incremented at submit (loop
         # side), decremented at finalize (engine side) BEFORE the "end"
         # sentinel is pushed — so when a client sees its stream end, the
@@ -299,6 +303,15 @@ class GenerateService:
     def _pump(self) -> None:
         """Forward newly sampled tokens to their client queues; finalize
         finished requests (metrics record + end-of-stream sentinel)."""
+        es = self.engine.stats
+        cur = (es.spec_proposed_tokens, es.spec_accepted_tokens,
+               es.spec_rejected_tokens)
+        if cur != self._spec_seen:
+            seen = self._spec_seen if all(
+                c >= s for c, s in zip(cur, self._spec_seen)) else (0, 0, 0)
+            self.metrics.on_speculation(cur[0] - seen[0], cur[1] - seen[1],
+                                        cur[2] - seen[2])
+            self._spec_seen = cur
         now = time.perf_counter()
         done = []
         for rid, st in self._streams.items():

@@ -1,0 +1,26 @@
+"""Speculative decoding on the chunked-prefill ABI.
+
+Draft (``drafter``), verify-in-one-launch (``decoder`` +
+``make_prefill_chunk_body(all_logits=True)``), accept/reject
+(``accept``), roll back rejected pages/state (``SequenceBlocks.rewind``
++ ``StateStore.restore_slot``).  Enable per engine via
+``EngineConfig(speculation=SpeculationConfig(...))``.
+"""
+
+from repro.serve.spec.accept import accept_draft, softmax_rows
+from repro.serve.spec.config import DRAFTER_KINDS, SpeculationConfig
+from repro.serve.spec.decoder import SpecDecoder
+from repro.serve.spec.drafter import (DraftModelDrafter, Drafter,
+                                      NgramDrafter, make_drafter)
+
+__all__ = [
+    "DRAFTER_KINDS",
+    "DraftModelDrafter",
+    "Drafter",
+    "NgramDrafter",
+    "SpecDecoder",
+    "SpeculationConfig",
+    "accept_draft",
+    "make_drafter",
+    "softmax_rows",
+]

@@ -1,0 +1,287 @@
+"""SpecDecoder: the speculative step — draft, verify in ONE launch, commit
+or roll back.
+
+A speculative step replaces a ``serve_step_bs{N}`` decode launch with a
+``verify_bs{N}_len{k+1}`` launch: the chunked-prefill body compiled with
+``all_logits=True``, so slot s feeds ``[next_token, d_1 .. d_k]`` at
+positions ``num_cached ..`` and the target hands back its distribution at
+EVERY fed position.  Accept/reject sampling (``accept.py``) then commits
+an accepted prefix plus exactly one sampled token — between 1 and k+1
+tokens of progress for one enqueue, never fewer than plain decode, and
+distributed exactly as the non-speculative sampler.
+
+Rollback of a rejected tail is asymmetric by state kind, exactly along
+the per-layer StateSpec split:
+
+  * **paged KV** — free bookkeeping.  Stale K/V past a slot's committed
+    position is causally masked in-kernel (the engine's standing
+    invariant), so rejecting drafts only requires ``SequenceBlocks
+    .rewind()`` of pages past the sequence's need — the pool's per-page
+    generation counters invalidate any stale published prefix.
+  * **dense (SSM) state** — the verify launch advanced the slot's
+    recurrent state through ALL fed positions unconditionally, so the
+    decoder snapshots the slot before the launch (``store.read_slot``)
+    and, on partial acceptance, restores it and rewinds ``num_cached`` to
+    the pre-launch position: the next (chunked-prefill) launch re-feeds
+    the accepted tokens, deterministically re-advancing the state and
+    rewriting byte-identical KV.
+
+Per-request adaptivity: an acceptance-rate EMA scales the draft length
+(``k_eff = round(ema * k)``); a request whose EMA rounds to zero rides
+plain decode and probes with a 1-token draft every ``probe_every``
+rounds so it can re-enter speculation when its output turns predictable.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import HybridKernel
+from repro.serve.decode import make_prefill_chunk_body
+from repro.serve.engine.block_cache import PoolExhausted
+from repro.serve.engine.request import RequestState
+from repro.serve.spec.accept import accept_draft
+from repro.serve.spec.config import SpeculationConfig
+from repro.serve.spec.drafter import DraftModelDrafter, make_drafter
+
+
+class SpecDecoder:
+    """Per-engine speculative-decoding driver (one per ServingEngine)."""
+
+    def __init__(self, engine, cfg: SpeculationConfig,
+                 drafter: Optional[object] = None):
+        ec = engine.engine_cfg
+        if cfg.k + 1 > ec.s_max:
+            raise ValueError(
+                f"speculation.k={cfg.k} needs k+1 <= s_max={ec.s_max}")
+        self.eng = engine
+        self.cfg = cfg
+        self.drafter = drafter if drafter is not None \
+            else make_drafter(cfg, engine)
+        if isinstance(self.drafter, DraftModelDrafter) \
+                and self.drafter.cfg.vocab_size != engine.cfg.vocab_size:
+            raise ValueError(
+                f"draft model vocab ({self.drafter.cfg.vocab_size}) must "
+                f"match target vocab ({engine.cfg.vocab_size})")
+        self._kernels: Dict[int, HybridKernel] = {}
+        self._ema: Dict[str, float] = {}       # request -> acceptance EMA
+        self._idle_rounds: Dict[str, int] = {}  # rounds since last probe
+
+    # -- the verify executable ---------------------------------------------
+
+    def _kernel(self, bucket: int) -> HybridKernel:
+        """``verify_bs{N}_len{k+1}``: the prefill-chunk body with
+        ``all_logits=True``, enqueued on the ENGINE's CommandQueue (same
+        session, same arena donation discipline as every other step)."""
+        kernel = self._kernels.get(bucket)
+        if kernel is None:
+            eng, ec = self.eng, self.eng.engine_cfg
+            L = self.cfg.k + 1
+            body, in_specs, out_specs, _, _ = make_prefill_chunk_body(
+                eng.cfg, eng.mesh, eng.plan, batch=bucket, s_max=ec.s_max,
+                chunk=L, paged=eng.paged, kernel_backend=ec.kernel_backend,
+                all_logits=True)
+            kernel = HybridKernel(
+                lambda grid, *args: body(*args), grid=eng.pctx.grid,
+                in_specs=in_specs, out_specs=out_specs,
+                name=f"verify_bs{bucket}_len{L}", donate=(1,))
+            self._kernels[bucket] = kernel
+        return kernel
+
+    # -- adaptive draft length ---------------------------------------------
+
+    def _k_for(self, r) -> int:
+        """Effective draft length for this request this round (0 = skip
+        speculation, let the slot ride as plain decode)."""
+        ema = self._ema.get(r.request_id, 1.0)
+        k_eff = int(round(ema * self.cfg.k))
+        if k_eff >= 1:
+            return k_eff
+        rid = r.request_id
+        self._idle_rounds[rid] = self._idle_rounds.get(rid, 0) + 1
+        if self._idle_rounds[rid] >= self.cfg.probe_every:
+            self._idle_rounds[rid] = 0
+            return 1                           # probe draft
+        return 0
+
+    def _update_ema(self, r, accepted: int, proposed: int) -> None:
+        if proposed < 1:
+            return
+        a = self.cfg.ema_alpha
+        prev = self._ema.get(r.request_id, 1.0)
+        self._ema[r.request_id] = (1 - a) * prev + a * (accepted / proposed)
+
+    def release(self, request_id: str) -> None:
+        self._ema.pop(request_id, None)
+        self._idle_rounds.pop(request_id, None)
+        self.drafter.release(request_id)
+
+    # -- the speculative step ----------------------------------------------
+
+    def step(self, sd) -> bool:
+        """Try one speculative step for the scheduled batch ``sd``.
+        Returns False (caller falls back to the plain decode launch) when
+        no slot yields a usable draft this round."""
+        eng = self.eng
+        ec = eng.engine_cfg
+        stride = eng.pool.block_pos_stride
+        B = sd.bucket
+        proposals: Dict[int, List[int]] = {}
+        for s, r in enumerate(sd.slots):
+            if r is None or not r.samples_this_step:
+                continue
+            # clamp so committed positions can never pass s_max - 1 nor
+            # emitted tokens pass max_tokens (termination still fires on
+            # the exact same token it would without speculation)
+            k = min(self._k_for(r),
+                    ec.s_max - 1 - r.num_cached,
+                    r.sampling.max_tokens - len(r.output_tokens) - 1)
+            if k < 1:
+                continue
+            toks = list(self.drafter.propose(r, k))[:k]
+            if not toks:
+                continue
+            if eng.store.needs_pages:
+                # page capacity for ALL fed positions; on pool pressure,
+                # shrink the draft rather than preempting anyone
+                try:
+                    r.blocks.ensure(r.num_cached + len(toks) + 1)
+                except PoolExhausted:
+                    cap = len(r.blocks.ids) * stride
+                    toks = toks[:max(0, cap - r.num_cached - 1)]
+                    if not toks:
+                        continue
+            proposals[s] = toks
+        if not proposals:
+            return False
+
+        # dense (recurrent) slots advance through every fed position in the
+        # verify launch, accepted or not: snapshot them first so a partial
+        # acceptance can restore (paged KV needs no snapshot — stale
+        # entries are causally masked)
+        snaps = {}
+        if eng.store.has_dense:
+            for s in proposals:
+                snaps[s] = eng.store.read_slot(sd.slots[s].dense_slot)
+
+        L = self.cfg.k + 1
+        has_pages = eng.store.needs_pages
+        has_dense = eng.store.has_dense
+        tokens = np.zeros((B, L), np.int32)
+        pos = np.zeros((B,), np.int32)
+        n_valid = np.zeros((B,), np.int32)
+        table = np.full((B, eng._table_width), -1, np.int32)
+        slots = np.full((B,), -1, np.int32)
+        fed = [0] * B
+        for s, r in enumerate(sd.slots):
+            if r is None:
+                continue
+            feed = [r.next_token] + proposals.get(s, [])
+            tokens[s, :len(feed)] = feed
+            pos[s] = r.num_cached
+            n_valid[s] = len(feed)
+            fed[s] = len(feed)
+            if has_pages:
+                table[s, :len(r.blocks.ids)] = r.blocks.ids
+            if has_dense:
+                slots[s] = r.dense_slot
+        dev = lambda a: jax.device_put(jnp.asarray(a), eng._vec_sharding)
+        dev2 = lambda a: jax.device_put(jnp.asarray(a), eng._table_sharding)
+        ops = ([dev2(table)] if has_pages else []) \
+            + ([dev(slots)] if has_dense else [])
+        logits, eng.store.arena = eng.queue.enqueue(
+            self._kernel(B), eng.params, eng.store.arena,
+            dev2(tokens), dev(pos), dev(n_valid), *ops)
+        st = eng.stats
+        st.steps += 1
+        st.spec_launches += 1
+        st.peak_blocks_used = max(st.peak_blocks_used, eng.pool.n_used)
+        if eng.store.slot_pool is not None:
+            st.peak_dense_slots_used = max(st.peak_dense_slots_used,
+                                           eng.store.slot_pool.n_used)
+        rows = np.asarray(logits[:, :, :eng.cfg.vocab_size])
+        # clFinish BEFORE the commit loop: a dense rollback below donates
+        # the arena through restore_slot, which would delete the buffers a
+        # later finish() blocks on (the logits are already materialized)
+        eng.queue.finish()
+
+        for s, r in enumerate(sd.slots):
+            if r is None:
+                continue
+            prev_nc = r.num_cached
+            toks = proposals.get(s, [])
+            nv = fed[s]
+            # only the first fed position can still be a prompt token (a
+            # speculating slot sits at num_cached == len(seq) - 1)
+            st.prompt_tokens_ingested += max(
+                0, min(prev_nc + 1, len(r.prompt)) - prev_nc)
+            if not toks and not r.samples_this_step:
+                # mid-prefill ride-along (chunking disabled): plain 1-token
+                # ingestion, no sampling
+                r.num_cached += 1
+                eng._publish_filled_pages(r, prev_nc, r.num_cached)
+                eng._maybe_publish_dense(r)
+                continue
+            rng = None
+            if r.sampling.temperature > 0.0:
+                rng = eng._rngs.get(r.request_id)
+                if rng is None:
+                    rng = eng._rngs[r.request_id] = \
+                        np.random.default_rng(r.sampling.seed)
+            # with toks == [] this reduces EXACTLY to the plain sampler on
+            # row 0 (same float64 softmax, same rng stream)
+            a, emitted = accept_draft(rows[s, :nv], toks,
+                                      r.sampling.temperature, rng)
+            st.spec_proposed_tokens += len(toks)
+            st.spec_accepted_tokens += a
+            st.spec_rejected_tokens += len(toks) - a
+            self._update_ema(r, a, len(toks))
+            finish = None
+            j = 0
+            for tok in emitted:
+                r.output_tokens.append(tok)
+                j += 1
+                # committed cache depth: fed positions backing the
+                # committed sequence (j <= a + 1 always)
+                r.num_cached = prev_nc + j
+                if len(r.output_tokens) == 1:
+                    r.first_token_t = time.perf_counter()
+                st.tokens_generated += 1
+                if r.state == RequestState.PREFILL:
+                    r.transition(RequestState.DECODE)
+                finish = r.finish_reason_for(tok, ec.s_max)
+                if finish is not None:
+                    break       # eos/length: drop the rest of the draft
+            eng._publish_filled_pages(r, prev_nc, r.num_cached)
+            if finish is not None:
+                # complete() releases pages and the dense slot wholesale —
+                # nothing left to roll back
+                eng.scheduler.complete(r, finish)
+                eng._rngs.pop(r.request_id, None)
+                self.release(r.request_id)
+                continue
+            # finish is None => the full accept loop ran: j == a + 1
+            if has_dense and s in snaps and r.num_cached != prev_nc + nv:
+                # partial acceptance: the launch over-advanced the slot's
+                # recurrent state.  Restore the pre-launch snapshot and
+                # rewind num_cached — the next launch re-feeds the accepted
+                # tokens (re-advancing dense state, rewriting identical KV)
+                # and only then samples again; the resampled token is
+                # already appended, so nothing is sampled twice.
+                eng.store.restore_slot(r.dense_slot, snaps[s])
+                r.num_cached = prev_nc
+                st.spec_rollbacks += 1
+                if has_pages:
+                    r.blocks.rewind(len(r.seq_tokens) + 1)
+            elif has_pages and a < len(toks):
+                # attention-only rejection: stale KV past the committed
+                # position is causally masked, so rollback is just freeing
+                # pages beyond the sequence's need (+1 lookahead)
+                if r.blocks.rewind(len(r.seq_tokens) + 1):
+                    st.spec_rollbacks += 1
+        return True

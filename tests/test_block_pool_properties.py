@@ -103,6 +103,73 @@ def test_fork_release_round_trips(n_blocks, stride, tokens, forks):
 
 
 @S
+@given(st.data())
+def test_rewind_generations_monotone_and_stale_prefixes_dead(data):
+    """The speculative-rollback contract: under ANY interleaving of
+    ensure / rewind / publish / reallocation, per-page generation counters
+    never decrease (each reallocation strictly bumps), and a published
+    prefix resolves IFF its page still carries the publish-time generation
+    — a rewound page's stale prefix can never come back after the page is
+    recycled, even by a different sequence."""
+    n = data.draw(st.integers(2, 10), label="n_blocks")
+    stride = data.draw(st.integers(1, 4), label="stride")
+    pool = BlockPool(n, stride)
+    seq = SequenceBlocks(pool)
+    other = SequenceBlocks(pool)    # the competing allocator
+    gens = list(pool._gen)
+    n_tokens = 0                    # seq's committed position count
+    published = {}                  # key -> (bid, publish-time generation)
+    for _ in range(data.draw(st.integers(0, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["ensure", "rewind", "publish", "steal", "lookup"]), label="op")
+        if op == "ensure":
+            grow = data.draw(st.integers(0, 2 * stride), label="grow")
+            try:
+                seq.ensure(n_tokens + grow)
+                n_tokens += grow
+            except PoolExhausted:
+                pass                # atomic: nothing allocated
+        elif op == "rewind" and n_tokens:
+            cut = data.draw(st.integers(0, n_tokens), label="cut")
+            before = len(seq.ids)
+            freed = seq.rewind(cut)
+            assert freed == before - len(seq.ids) >= 0
+            assert len(seq.ids) == pool.blocks_for(cut)
+            n_tokens = cut
+        elif op == "publish" and seq.ids:
+            i = data.draw(st.integers(0, len(seq.ids) - 1), label="page")
+            bid = seq.ids[i]
+            pool.publish_prefix((i,), bid)
+            published[(i,)] = (bid, pool._gen[bid])
+        elif op == "steal":
+            # force reallocation pressure on rewound pages
+            try:
+                other.ensure(other.capacity + 1)
+            except PoolExhausted:
+                other.release_all()
+        elif op == "lookup" and published:
+            key = data.draw(st.sampled_from(sorted(published)),
+                            label="key")
+            bid, gen = published[key]
+            got = pool.lookup_prefix(key)
+            if pool._gen[bid] == gen:
+                # page never recycled since publish: must resolve (even if
+                # currently free — the hit revives it with a reference)
+                assert got == bid and pool.refcount(bid) > 0
+                pool.release(got)   # drop the reference the hit handed us
+            else:
+                assert got is None  # recycled: the stale prefix is dead
+        for b in range(n):
+            assert pool._gen[b] >= gens[b], f"generation moved backwards {b}"
+        gens = list(pool._gen)
+        _check_invariants(pool)
+    seq.release_all()
+    other.release_all()
+    _check_invariants(pool)
+    assert pool.n_free == pool.n_blocks
+
+
+@S
 @given(st.integers(1, 6))
 def test_prefix_never_resolves_after_recycling(n_blocks):
     """Once a freed page is reallocated, every stale prefix entry for it

@@ -1,0 +1,337 @@
+"""Speculative decoding on the chunked-prefill ABI.
+
+The load-bearing assertions, per the acceptance criteria:
+
+  * GREEDY PARITY — a speculative engine (any drafter, even an
+    adversarially wrong one) emits token-for-token what the plain engine
+    emits: rejected drafts roll back completely (paged-KV rewind for
+    attention, snapshot restore for dense SSM state) and the verify
+    launch's own sampled token keeps forward progress;
+  * DISTRIBUTION EQUALITY — for temperature > 0, ``accept_draft``'s
+    accept/resample rule leaves the emitted-token marginal exactly the
+    target softmax (point-mass rejection sampling);
+  * a perfect drafter (the draft model sharing the target's params) is
+    accepted at rate 1.0 — the verify ABI (``all_logits=True`` rows of the
+    prefill-chunk body) scores draft positions bit-identically to the
+    step-by-step decode path;
+  * rollback then ``fork()`` shares only accepted pages (the rewound tail
+    was released back to the pool before the fork adopted the prefix).
+"""
+
+import types
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import (EngineConfig, SamplingParams, build_engine,
+                                generate)
+from repro.serve.spec import (DraftModelDrafter, Drafter, NgramDrafter,
+                              SpecDecoder, SpeculationConfig, accept_draft,
+                              softmax_rows)
+from repro.serve.spec.drafter import _find_continuation
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32,
+           attn_block_kv=32)
+ATTN = ModelConfig(name="att", family="dense", d_model=64, n_layers=2,
+                   n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128, **F32)
+HYBRID = ModelConfig(
+    name="hyb", family="hybrid", d_model=64, n_layers=2, n_heads=8,
+    n_kv_heads=4, d_ff=128, vocab_size=128, d_inner=128, ssm_heads=8,
+    ssm_headdim=16, ssm_state=16, ssm_groups=4,
+    layer_pattern=(("attn", "mlp"), ("mamba", "mlp")), sub_quadratic=True,
+    **F32)
+S_MAX = 48
+
+
+def _repetitive_prompts(rng, n, vocab):
+    """Tiled short patterns: the regime prompt-lookup drafting targets."""
+    out = []
+    for _ in range(n):
+        pat = rng.integers(0, vocab, size=int(rng.integers(2, 5))).tolist()
+        out.append((pat * 6)[:12])
+    return out
+
+
+class _WrongDrafter:
+    """Adversarial drafter: always proposes (last_token + 7) mod vocab
+    repeated — near-certain rejections, so every launch exercises the
+    rollback path while parity must still hold."""
+
+    name = "wrong"
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def propose(self, request, k):
+        t = request.seq_tokens[-1]
+        return [(t + 7) % self.vocab] * max(1, k)
+
+    def release(self, request_id):
+        pass
+
+
+# -- drafters --------------------------------------------------------------
+
+
+def test_find_continuation_longest_then_most_recent():
+    # longest matching tail n-gram wins: [1,2,3] over [3]
+    assert _find_continuation([1, 2, 3, 9, 1, 2, 3], 2, 3, 1) == [9, 1]
+    # among equal-length matches the MOST RECENT occurrence supplies the
+    # continuation (closest context): [5,1,2,>7<,1,2,...] vs [...,1,2,>8<]
+    assert _find_continuation([5, 1, 2, 7, 1, 2, 8, 1, 2], 1, 2, 1) == [8]
+    # no earlier occurrence of any tail n-gram -> no proposal
+    assert _find_continuation([1, 2, 3], 4, 3, 1) == []
+    # continuation is capped at k
+    assert _find_continuation([1, 2, 3, 4, 5, 1, 2], 2, 2, 1) == [3, 4]
+
+
+def test_ngram_drafter_protocol_and_proposals():
+    d = NgramDrafter(ngram_max=3, ngram_min=1)
+    assert isinstance(d, Drafter)
+    req = types.SimpleNamespace(request_id="r",
+                                seq_tokens=[3, 1, 2, 3, 1, 2, 3, 1])
+    assert d.propose(req, 4) == [2, 3, 1]
+    assert d.propose(req, 0) == []
+    d.release("r")      # stateless: must not raise
+    with pytest.raises(ValueError):
+        NgramDrafter(ngram_max=2, ngram_min=3)
+
+
+# -- accept/reject sampling ------------------------------------------------
+
+
+def _rows(argmaxes, vocab=16):
+    """Logit rows whose greedy tokens are ``argmaxes``."""
+    rows = np.zeros((len(argmaxes), vocab), np.float32)
+    for i, a in enumerate(argmaxes):
+        rows[i, a] = 4.0
+    return rows
+
+
+def test_accept_draft_greedy_prefix_and_bonus():
+    rows = _rows([5, 6, 7, 8])
+    # full acceptance: k drafts + the bonus token from the last row
+    a, emitted = accept_draft(rows, [5, 6, 7], 0.0, None)
+    assert (a, emitted) == (3, [5, 6, 7, 8])
+    # first mismatch cuts the run; the mismatching row's own argmax is
+    # emitted instead (the launch always makes >= 1 token progress)
+    a, emitted = accept_draft(rows, [5, 9, 7], 0.0, None)
+    assert (a, emitted) == (1, [5, 6])
+    a, emitted = accept_draft(rows, [9, 6, 7], 0.0, None)
+    assert (a, emitted) == (0, [5])
+    # empty draft: plain decode through the verify row
+    a, emitted = accept_draft(rows[:1], [], 0.0, None)
+    assert (a, emitted) == (0, [5])
+    assert len(emitted) == a + 1
+
+
+def test_accept_draft_validation():
+    rows = _rows([1])
+    with pytest.raises(ValueError):
+        accept_draft(rows, [1], 0.0, None)          # needs k+1 = 2 rows
+    with pytest.raises(ValueError):
+        accept_draft(rows, [], 0.5, None)           # temperature needs rng
+
+
+def test_accept_draft_preserves_target_distribution():
+    """Point-mass rejection sampling: accept draft d w.p. p(d), else
+    resample from p with d removed — the emitted-token marginal must be
+    EXACTLY p, however bad the draft.  Empirical check at n=4000."""
+    rng_rows = np.random.default_rng(3)
+    rows = rng_rows.normal(size=(2, 8)).astype(np.float32) * 2.0
+    temperature = 0.7
+    p = softmax_rows(rows[0], temperature)
+    draft = [int(np.argmin(p))]     # worst-case draft: the least likely
+    counts = np.zeros(8)
+    n = 4000
+    rng = np.random.default_rng(4)
+    for _ in range(n):
+        _, emitted = accept_draft(rows, draft, temperature, rng)
+        counts[emitted[0]] += 1
+    assert np.abs(counts / n - p).sum() < 0.06
+    # and the draft token is still emitted at close to its true mass
+    assert counts[draft[0]] / n == pytest.approx(p[draft[0]], abs=0.02)
+
+
+# -- configuration ---------------------------------------------------------
+
+
+def test_speculation_config_validation():
+    with pytest.raises(ValueError):
+        SpeculationConfig(drafter="bogus")
+    with pytest.raises(ValueError):
+        SpeculationConfig(k=0)
+    with pytest.raises(ValueError):
+        SpeculationConfig(ngram_min=3, ngram_max=2)
+    with pytest.raises(ValueError):
+        SpeculationConfig(ema_alpha=0.0)
+    with pytest.raises(ValueError):
+        SpeculationConfig(probe_every=0)
+
+
+def test_spec_k_must_fit_s_max(mesh16, plan16):
+    ec = EngineConfig(s_max=16, buckets=(1,), block_pos_stride=4,
+                      speculation=SpeculationConfig(k=16))
+    with pytest.raises(ValueError, match="k"):
+        build_engine(ATTN, mesh16, plan16, engine_cfg=ec, seed=0)
+
+
+# -- engine parity ---------------------------------------------------------
+
+
+def _paired_generate(cfg, mesh, plan, prompts, sampling, speculation,
+                     drafter=None):
+    ec_off = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4),
+                          block_pos_stride=8)
+    eng_off = build_engine(cfg, mesh, plan, engine_cfg=ec_off, seed=0)
+    base = generate(eng_off, prompts, sampling)
+    ec_on = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=8,
+                         speculation=speculation)
+    eng_on = build_engine(cfg, mesh, plan, engine_cfg=ec_on, seed=0)
+    if drafter is not None:
+        eng_on.spec = SpecDecoder(eng_on, speculation, drafter=drafter)
+    spec = generate(eng_on, prompts, sampling)
+    return base, spec, eng_on
+
+
+def test_greedy_parity_attention_only(mesh16, plan16):
+    prompts = _repetitive_prompts(np.random.default_rng(0), 4,
+                                  ATTN.vocab_size)
+    base, spec, eng = _paired_generate(
+        ATTN, mesh16, plan16, prompts, SamplingParams(max_tokens=10),
+        SpeculationConfig(drafter="ngram", k=4))
+    assert [c.tokens for c in spec] == [c.tokens for c in base]
+    assert all(len(c.tokens) == 10 for c in spec)   # never overshoots
+    st = eng.stats
+    assert st.spec_launches > 0
+    assert st.spec_proposed_tokens == \
+        st.spec_accepted_tokens + st.spec_rejected_tokens
+    assert st.launches == \
+        st.decode_launches + st.prefill_launches + st.spec_launches
+    assert eng.pool.n_free == eng.pool.n_blocks      # nothing leaked
+
+
+def test_greedy_parity_hybrid_with_dense_rollback(mesh16, plan16):
+    """Dense SSM state cannot be causally masked like paged KV: a rejected
+    tail must RESTORE the pre-verify snapshot.  The adversarial drafter
+    forces a rejection on every launch; parity proves restore + re-feed of
+    accepted tokens is exact."""
+    prompts = _repetitive_prompts(np.random.default_rng(1), 3,
+                                  HYBRID.vocab_size)
+    cfg = SpeculationConfig(drafter="ngram", k=3)
+    base, spec, eng = _paired_generate(
+        HYBRID, mesh16, plan16, prompts, SamplingParams(max_tokens=8),
+        cfg, drafter=_WrongDrafter(HYBRID.vocab_size))
+    assert [c.tokens for c in spec] == [c.tokens for c in base]
+    st = eng.stats
+    assert st.spec_rejected_tokens > 0
+    assert st.spec_rollbacks > 0
+    assert eng.store.n_restores >= st.spec_rollbacks
+
+
+def test_greedy_parity_attn_with_wrong_drafter_and_eos(mesh16, plan16):
+    """Rejection-heavy run on the paged path (host-side rewind), with an
+    eos landing mid-stream: the speculative engine must stop at exactly
+    the same token the plain engine stops at."""
+    prompts = _repetitive_prompts(np.random.default_rng(2), 3,
+                                  ATTN.vocab_size)
+    sampling = SamplingParams(max_tokens=10)
+    base_probe, _, _ = _paired_generate(
+        ATTN, mesh16, plan16, prompts, sampling,
+        SpeculationConfig(drafter="ngram", k=3))
+    # eos = a token the plain run actually emits mid-stream
+    eos = base_probe[0].tokens[4]
+    sampling = SamplingParams(max_tokens=10, eos_token_id=eos)
+    cfg = SpeculationConfig(drafter="ngram", k=3)
+    base, spec, eng = _paired_generate(
+        ATTN, mesh16, plan16, prompts, sampling, cfg,
+        drafter=_WrongDrafter(ATTN.vocab_size))
+    assert [c.tokens for c in spec] == [c.tokens for c in base]
+    assert [c.finish_reason for c in spec] == \
+        [c.finish_reason for c in base]
+    assert eng.stats.spec_rejected_tokens > 0
+    assert eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_rollback_then_fork_shares_only_accepted_pages(mesh16, plan16):
+    """After a rejected-tail rewind released the speculative pages, a
+    fork() adopts ONLY the accepted prefix: peak pool occupancy stays
+    strictly under two solo sequences and the fork reproduces the parent's
+    greedy tokens."""
+    stride, plen, n_tok = 4, 9, 6
+    # k > stride: the first (all-rejected) verify launch must grow the
+    # block table past a page boundary, so its rewind actually frees pages
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2), block_pos_stride=stride,
+                      prefill_chunks=(),
+                      speculation=SpeculationConfig(drafter="ngram", k=6))
+    eng = build_engine(ATTN, mesh16, plan16, engine_cfg=ec, seed=0)
+    eng.spec.drafter = _WrongDrafter(ATTN.vocab_size)
+    prompt = np.random.default_rng(8).integers(
+        0, ATTN.vocab_size, size=plen).tolist()
+    parent = eng.submit(prompt, SamplingParams(max_tokens=n_tok))
+    for _ in range(plen):          # prefill: prompt pages publish
+        eng.step()
+    for _ in range(2):             # speculative decode rounds (rejections)
+        eng.step()
+    assert eng.stats.spec_rollbacks > 0
+    child = eng.fork(parent)
+    eng.drain()
+    assert child.output_tokens == parent.output_tokens
+    solo = eng.pool.blocks_for(plen + n_tok + 1)
+    shared = (plen - 1) // stride
+    assert eng.stats.peak_blocks_used <= 2 * solo - shared < 2 * solo
+    assert eng.pool.n_free == eng.pool.n_blocks
+
+
+def test_draft_model_self_draft_accepts_everything(mesh16, plan16):
+    """The draft-model drafter running the TARGET's own params is a
+    perfect oracle under greedy: every proposal must be accepted — this
+    pins the verify ABI (all-position logits of the prefill-chunk body)
+    to the step-by-step decode path bit-for-bit."""
+    ec_off = EngineConfig(s_max=S_MAX, buckets=(1,), block_pos_stride=8)
+    eng_off = build_engine(ATTN, mesh16, plan16, engine_cfg=ec_off, seed=0)
+    prompt = np.random.default_rng(5).integers(
+        0, ATTN.vocab_size, size=6).tolist()
+    sampling = SamplingParams(max_tokens=12)
+    base = generate(eng_off, [prompt], sampling)
+    cfg = SpeculationConfig(drafter="draft_model", k=3)
+    ec_on = EngineConfig(s_max=S_MAX, buckets=(1,), block_pos_stride=8,
+                         speculation=SpeculationConfig(drafter="ngram", k=3))
+    eng_on = build_engine(ATTN, mesh16, plan16, engine_cfg=ec_on, seed=0)
+    drafter = DraftModelDrafter(ATTN, mesh16, plan16, s_max=S_MAX, stride=8,
+                                params=eng_on.params, chunk=8)
+    eng_on.spec = SpecDecoder(eng_on, cfg, drafter=drafter)
+    spec = generate(eng_on, [prompt], sampling)
+    assert spec[0].tokens == base[0].tokens
+    st = eng_on.stats
+    assert st.spec_proposed_tokens > 0
+    assert st.spec_accept_rate == 1.0
+    assert drafter.n_launches > 0
+
+
+def test_draft_model_rejects_dense_configs(mesh16, plan16):
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        DraftModelDrafter(HYBRID, mesh16, plan16, s_max=S_MAX, stride=8)
+
+
+def test_ema_falls_back_to_plain_decode_then_probes(mesh16, plan16):
+    """A request whose drafts never verify must stop paying for full-k
+    verify launches: the acceptance EMA drives k_eff to zero and the slot
+    decodes plainly, with a 1-token probe draft every ``probe_every``
+    rounds."""
+    prompts = _repetitive_prompts(np.random.default_rng(3), 2,
+                                  ATTN.vocab_size)
+    cfg = SpeculationConfig(drafter="ngram", k=4, ema_alpha=1.0,
+                            probe_every=4)
+    base, spec, eng = _paired_generate(
+        ATTN, mesh16, plan16, prompts, SamplingParams(max_tokens=12), cfg,
+        drafter=_WrongDrafter(ATTN.vocab_size))
+    assert [c.tokens for c in spec] == [c.tokens for c in base]
+    st = eng.stats
+    # after the first all-rejected launch the EMA is 0: most rounds are
+    # plain decode, and proposals shrink to 1-token probes
+    assert st.decode_launches > 0
+    assert st.spec_launches < st.decode_launches
