@@ -232,6 +232,154 @@ def run(report, steps=None, json_path="auto", config=None, timestamp=None,
     return tok_s
 
 
+# The degraded-mode fault profile (--faults): every injection site lit at
+# a rate low enough that the retry budget usually covers a streak, so the
+# paired record shows graceful degradation, not collapse.
+FAULT_RATES = {"launch": 0.08, "device": 0.06, "nan_logits": 0.03,
+               "pool": 0.06, "stall": 0.02}
+
+
+def run_faults(report, json_path="auto", config=None, timestamp=None,
+               kernel_backend=None, seed=0, smoke=False):
+    """Paired fault-free vs degraded-mode full passes over one workload;
+    appends BOTH records (``fault_profile`` "off" / "chaos") to the
+    trajectory.  The degraded pass serves the same seeded workload under a
+    deterministic :class:`FaultInjector` (launch raises, device failures,
+    NaN logits, pool steals, stalls) with the default retry/quarantine
+    policy, and the record carries tokens/sec, the completion rate, and
+    the engine's fault counters — the serving analogue of running the
+    board with a flaky link and reporting how much of the traffic still
+    lands.
+
+    Two explicit raises gate the pair: every request must reach a
+    TERMINAL state (no hang under chaos — the soak-test invariant), and
+    pool/slot accounting must drain to zero after both passes (injected
+    faults never leak pages)."""
+    from repro.serve.resilience import FaultInjector, ResilienceConfig
+    if json_path == "auto":
+        json_path = None if smoke else JSON_PATH
+    if kernel_backend is None:
+        from repro.kernels import default_kernel_backend
+        kernel_backend = default_kernel_backend()
+    cfg = _bench_config(config)
+    mesh = jax.make_mesh((1, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+    rng = np.random.default_rng(seed)
+    if smoke:
+        prompts = [rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(2, 8))).tolist()
+                   for _ in range(4)]
+        sampling = [SamplingParams(max_tokens=4)] * 4
+    else:
+        prompts, sampling = _workload(rng, cfg.vocab_size)
+
+    # the smoke pass is short, so it runs the profile hot (and capped) to
+    # guarantee the guard path actually executes in CI
+    rates = {k: min(1.0, 4 * v) for k, v in FAULT_RATES.items()} \
+        if smoke else FAULT_RATES
+    results = {}
+    for label in ("off", "chaos"):
+        inj = None if label == "off" else FaultInjector(
+            seed + 1, rates, stall_s=0.001,
+            max_faults=20 if smoke else None)
+        ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8),
+                          block_pos_stride=8, kernel_backend=kernel_backend,
+                          max_steps=20_000,      # hang valve under chaos
+                          fault_injector=inj,
+                          resilience=None if inj is None
+                          else ResilienceConfig())
+        eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
+        if not smoke:
+            # warm every bucket executable, then zero the counters so the
+            # timed pass (and its fault counters) reports steady state;
+            # the injector keeps its deterministic schedule across both
+            # passes, so counts() below is cumulative — the per-pass
+            # fault_* numbers come from the reset EngineStats
+            for b in ec.buckets:
+                generate(eng, prompts[:b], SamplingParams(max_tokens=1))
+            eng.stats = EngineStats()
+        outs = generate(eng, prompts, sampling)
+        st = eng.stats
+        if any(c.finish_reason is None for c in outs):
+            raise RuntimeError(
+                f"[{label}] request left non-terminal under the fault "
+                f"profile: chaos must never hang a request")
+        if eng.pool.n_free != eng.pool.n_blocks:
+            raise RuntimeError(
+                f"[{label}] pool accounting leaked: "
+                f"{eng.pool.n_blocks - eng.pool.n_free} pages still held")
+        ok = sum(c.finish_reason in ("stop", "length") for c in outs)
+        results[label] = {
+            "tok_s": eng.throughput_tok_s(),
+            "completion_rate": ok / len(outs),
+            "quarantined": sum(c.finish_reason == "error" for c in outs),
+            "stats": st,
+            "injector_counts": inj.counts() if inj is not None else {},
+            "n_fired": inj.n_fired if inj is not None else 0,
+        }
+        r = results[label]
+        report(f"serve.faults.{label}.tokens_per_sec", f"{r['tok_s']:.1f}",
+               f"{st.tokens_generated} tokens, {st.steps} launches")
+        report(f"serve.faults.{label}.completion_rate",
+               f"{r['completion_rate']:.2f}",
+               f"{ok}/{len(outs)} requests finished stop|length")
+        if inj is not None:
+            report("serve.faults.chaos.injected", inj.n_fired,
+                   " ".join(f"{k}={v}" for k, v in
+                            sorted(inj.counts().items()) if v))
+            report("serve.faults.chaos.retries", st.fault_retries,
+                   f"launch_failures={st.fault_launch_failures} "
+                   f"nonfinite={st.fault_nonfinite}")
+            report("serve.faults.chaos.quarantined", r["quarantined"],
+                   "requests finished as error")
+            report("serve.faults.chaos.pool_steals", st.fault_pool_steals,
+                   f"stalls={st.fault_stalls}")
+
+    if results["chaos"]["n_fired"] == 0:
+        raise RuntimeError(
+            "the chaos pass injected zero faults: the degraded-mode "
+            "record would be vacuous (rates/workload too small)")
+    degradation = (results["chaos"]["tok_s"] / results["off"]["tok_s"]
+                   if results["off"]["tok_s"] else 0.0)
+    report("serve.faults.throughput_ratio", f"{degradation:.2f}",
+           "chaos / fault-free tokens per sec (graceful degradation)")
+
+    if json_path:
+        stamp = timestamp or datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds")
+        for label, r in results.items():
+            st = r["stats"]
+            payload = {
+                "bench": "serve_throughput",
+                "config": cfg.name,
+                "kernel_backend": kernel_backend,
+                "seed": seed,
+                "timestamp": stamp,
+                "mode": "faults",
+                "fault_profile": label,
+                "fault_rates": rates if label == "chaos" else None,
+                "tokens_per_sec": round(r["tok_s"], 2),
+                "throughput_ratio_vs_off": round(degradation, 3)
+                if label == "chaos" else None,
+                "completion_rate": round(r["completion_rate"], 4),
+                "quarantined": r["quarantined"],
+                "tokens_generated": st.tokens_generated,
+                "steps": st.steps,
+                "fault_injected": r["injector_counts"],
+                "fault_launch_failures": st.fault_launch_failures,
+                "fault_retries": st.fault_retries,
+                "fault_nonfinite": st.fault_nonfinite,
+                "fault_quarantined": st.fault_quarantined,
+                "fault_pool_steals": st.fault_pool_steals,
+                "fault_stalls": st.fault_stalls,
+            }
+            n = _append_trajectory(json_path, payload)
+        report("serve.faults.json", os.path.relpath(json_path),
+               f"paired records appended ({n} total)")
+    return degradation
+
+
 def _oracle_rounds(prefix, cont, k, ngram_max, ngram_min=1):
     """Verify launches a prompt-lookup drafter needs to emit ``cont`` after
     ``prefix`` (greedy parity makes the token stream drafter-independent, so
@@ -448,6 +596,14 @@ def main():
                          "records and enforces greedy parity + the >= 2x "
                          "decode-rate claim (--steps downgrades it to a "
                          "parity-only smoke)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the PAIRED fault-free/degraded pass: the "
+                         "same workload served plain and under the seeded "
+                         "chaos profile (launch/device/NaN/pool/stall "
+                         "faults with the default retry + quarantine "
+                         "policy); appends two records with completion "
+                         "rate and fault counters (--steps downgrades it "
+                         "to a terminality-only smoke)")
     ap.add_argument("--spec-requests", type=int, default=8,
                     help="workload size for --speculation")
     ap.add_argument("--spec-tokens", type=int, default=32,
@@ -458,6 +614,12 @@ def main():
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
+    if args.faults:
+        run_faults(report, json_path=args.json or "auto",
+                   config=args.config, timestamp=args.timestamp,
+                   kernel_backend=args.kernel_backend, seed=args.seed,
+                   smoke=args.steps is not None)
+        return
     if args.speculation:
         run_speculation(report, json_path=args.json or "auto",
                         config=args.config, timestamp=args.timestamp,

@@ -1,1 +1,6 @@
-from repro.runtime.fault_tolerance import FaultConfig, TrainController, TransientWorkerFailure
+from repro.runtime.fault_tolerance import (FaultConfig, TrainController,
+                                           TransientWorkerFailure)
+from repro.runtime.retry import RetryPolicy, retry_with_backoff
+
+__all__ = ["FaultConfig", "TrainController", "TransientWorkerFailure",
+           "RetryPolicy", "retry_with_backoff"]

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
@@ -30,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
+from repro.runtime.retry import RetryPolicy, retry_with_backoff
 
 log = logging.getLogger("repro.runtime")
 
@@ -40,8 +40,16 @@ class FaultConfig:
     ckpt_every: int = 50
     keep: int = 3
     max_retries: int = 3
+    backoff_s: float = 0.01
     fail_injector: Optional[Callable[[int], None]] = None   # tests
     skip_nonfinite: bool = True
+
+    @property
+    def retry_policy(self) -> RetryPolicy:
+        """The shared bounded-retry policy (``repro.runtime.retry``) —
+        the serving engine's step guard consumes the same class."""
+        return RetryPolicy(max_retries=self.max_retries,
+                           backoff_s=self.backoff_s)
 
 
 class TrainController:
@@ -66,34 +74,37 @@ class TrainController:
         log.info("resumed from step %d", step)
         return step + 1, state["params"], state["opt"]
 
+    def _attempt_step(self, params, opt_state, batch, step: int):
+        """One (possibly retried) training step.  Returns the new
+        (params, opt_state) — unchanged when the anomaly guard skipped a
+        non-finite loss."""
+        if self.fcfg.fail_injector is not None:
+            self.fcfg.fail_injector(step)
+        new_p, new_o, metrics = self.step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        if self.fcfg.skip_nonfinite and not np.isfinite(loss):
+            self.skipped += 1
+            log.warning("non-finite loss at step %d; skipping", step)
+            return params, opt_state      # keep old params/opt_state
+        self.metrics_log.append((step, loss))
+        return new_p, new_o
+
     def run(self, params, opt_state, n_steps: int, start_step: int = 0):
         step = start_step
         while step < n_steps:
             batch = self.make_batch(step)
-            attempt = 0
-            while True:
-                try:
-                    if self.fcfg.fail_injector is not None:
-                        self.fcfg.fail_injector(step)
-                    new_p, new_o, metrics = self.step_fn(params, opt_state,
-                                                         batch)
-                    loss = float(metrics["loss"])
-                    if self.fcfg.skip_nonfinite and not np.isfinite(loss):
-                        self.skipped += 1
-                        log.warning("non-finite loss at step %d; skipping",
-                                    step)
-                        break      # keep old params/opt_state
-                    params, opt_state = new_p, new_o
-                    self.metrics_log.append((step, loss))
-                    break
-                except _TRANSIENT as e:       # noqa: PERF203
-                    attempt += 1
-                    self.retries += 1
-                    if attempt > self.fcfg.max_retries:
-                        raise
-                    log.warning("step %d failed (%s); retry %d", step, e,
-                                attempt)
-                    time.sleep(0.01 * attempt)
+
+            def _count(attempt, e, step=step):
+                self.retries += 1
+                log.warning("step %d failed (%s); retry %d", step, e, attempt)
+
+            # the SHARED retry semantics (repro.runtime.retry): bounded
+            # attempts, linear backoff, transient-only — the serving
+            # engine's step guard runs the identical helper
+            params, opt_state = retry_with_backoff(
+                lambda: self._attempt_step(params, opt_state, batch, step),
+                policy=self.fcfg.retry_policy, transient=_TRANSIENT,
+                on_retry=_count)
             if self.fcfg.ckpt_every and (step + 1) % self.fcfg.ckpt_every == 0:
                 ckpt.save(self.fcfg.ckpt_dir, step,
                           {"params": params, "opt": opt_state},

@@ -1,0 +1,70 @@
+"""Shared bounded-retry semantics: ONE policy, two clients.
+
+Extracted from the training fault-tolerance controller so the serving
+engine's step-retry path (``repro.serve.resilience``) and
+:class:`~repro.runtime.fault_tolerance.TrainController` share the exact
+same retry discipline — bounded attempts, linear backoff, transient-only —
+instead of growing two subtly different loops.
+
+A *transient* failure is one where re-running the same deterministic work
+is expected to succeed (worker preemption, link flap, an injected chaos
+fault); anything else propagates immediately.  Attempts beyond
+``max_retries`` re-raise the last transient error, so callers always see
+either a success or the real exception.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Tuple, Type, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-attempt retry with linear backoff.
+
+    ``max_retries`` counts RE-tries: 0 means one attempt total.  Sleeps
+    ``backoff_s * attempt`` between attempts (attempt 1, 2, ...), the same
+    linear ramp the training controller has always used; 0.0 disables
+    sleeping entirely (the serving engine's default — a drive-loop retry
+    must not stall batch-mates).
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.01
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+
+
+def retry_with_backoff(
+        fn: Callable[[], T], *,
+        policy: RetryPolicy,
+        transient: Tuple[Type[BaseException], ...],
+        on_retry: Optional[Callable[[int, BaseException], None]] = None,
+        sleep: Callable[[float], None] = time.sleep) -> T:
+    """Run ``fn`` until it succeeds or retries are exhausted.
+
+    ``on_retry(attempt, exc)`` fires before each re-try (attempt starts at
+    1) — the hook where both clients count/log/rollback; raising from it
+    aborts the loop.  ``sleep`` is injectable so tests never wall-wait.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except transient as e:                 # noqa: PERF203
+            attempt += 1
+            if attempt > policy.max_retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if policy.backoff_s:
+                sleep(policy.backoff_s * attempt)

@@ -23,7 +23,8 @@ from repro.serve.engine.block_cache import (BlockLayout, BlockPool,
                                             DenseSlotPool, PoolExhausted,
                                             SequenceBlocks, block_layout)
 from repro.serve.engine.engine import EngineConfig, EngineStats, ServingEngine
-from repro.serve.engine.request import Request, RequestState, SamplingParams
+from repro.serve.engine.request import (FINISH_REASONS, Request, RequestState,
+                                        SamplingParams)
 from repro.serve.engine.scheduler import (AdmissionPolicy, FifoAdmission,
                                           ScheduledStep, Scheduler,
                                           SchedulerConfig)
@@ -31,7 +32,8 @@ from repro.serve.engine.state_store import NullStateHook, StateStore
 
 __all__ = [
     "AdmissionPolicy", "BlockLayout", "BlockPool", "Completion",
-    "DenseSlotPool", "EngineConfig", "EngineStats", "FifoAdmission",
+    "DenseSlotPool", "EngineConfig", "EngineStats", "FINISH_REASONS",
+    "FifoAdmission",
     "NullStateHook", "PoolExhausted", "Request", "RequestState",
     "SamplingParams", "ScheduledStep", "Scheduler", "SchedulerConfig",
     "SequenceBlocks", "ServingEngine", "StateStore", "block_layout",

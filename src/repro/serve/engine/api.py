@@ -22,7 +22,9 @@ class Completion:
     request_id: str
     prompt: List[int]
     tokens: List[int]              # generated tokens (incl. EOS when hit)
-    finish_reason: str             # "stop" | "length" | "cancelled" | "shed"
+    # one of request.FINISH_REASONS: "stop" | "length" | "cancelled" |
+    # "shed" | "error" (resilience quarantine) | "drained" (graceful drain)
+    finish_reason: str
     n_preemptions: int
     ttft_s: Optional[float] = None  # submit-to-first-token (None if no token)
     # submit-to-first-admission wait (None when never admitted — a request

@@ -59,6 +59,8 @@ from repro.serve.engine.state_store import StateStore
 from repro.serve.state import layer_state_specs
 
 if TYPE_CHECKING:                              # no import cycle at runtime:
+    from repro.serve.resilience.faults import FaultInjector  # pragma: no cover
+    from repro.serve.resilience.guard import ResilienceConfig  # pragma: no cover
     from repro.serve.spec.config import SpeculationConfig  # pragma: no cover
 
 
@@ -86,6 +88,13 @@ class EngineConfig:
     # decode steps draft k tokens per slot and verify them in ONE
     # ``verify_bs{N}_len{k+1}`` launch; k+1 must fit s_max.
     speculation: Optional["SpeculationConfig"] = None
+    # chaos / resilience (repro.serve.resilience): a seeded FaultInjector
+    # makes the drive loop inject deterministic faults at named sites; a
+    # ResilienceConfig bounds step retries and sets the quarantine
+    # threshold.  Setting either arms the StepGuard (an injector with no
+    # explicit resilience config gets the defaults).
+    fault_injector: Optional["FaultInjector"] = None
+    resilience: Optional["ResilienceConfig"] = None
 
     def __post_init__(self):
         check_kernel_backend(self.kernel_backend)
@@ -121,6 +130,13 @@ class EngineStats:
     spec_accepted_tokens: int = 0         # of which the target accepted
     spec_rejected_tokens: int = 0         # of which were rolled back
     spec_rollbacks: int = 0               # partial-acceptance rewinds
+    # resilience counters (0 everywhere without a StepGuard)
+    fault_launch_failures: int = 0        # failed launch attempts (incl. final)
+    fault_retries: int = 0                # of which were retried
+    fault_nonfinite: int = 0              # non-finite logits rows rolled back
+    fault_quarantined: int = 0            # requests finished as "error"
+    fault_pool_steals: int = 0            # injected pool-pressure episodes
+    fault_stalls: int = 0                 # injected step stalls
 
     @property
     def spec_accept_rate(self) -> float:
@@ -222,6 +238,12 @@ class ServingEngine:
             # module-level import here would cycle through its __init__
             from repro.serve.spec.decoder import SpecDecoder
             self.spec = SpecDecoder(self, ec.speculation)
+        self.guard = None
+        if ec.fault_injector is not None or ec.resilience is not None:
+            # deferred import for the same reason as speculation
+            from repro.serve.resilience.guard import (ResilienceConfig,
+                                                      StepGuard)
+            self.guard = StepGuard(self, ec.resilience or ResilienceConfig())
 
     # -- request intake ----------------------------------------------------
     #
@@ -359,18 +381,43 @@ class ServingEngine:
         ``min(remaining[s], L)`` positions (decode slots ride along with
         one valid position).  The trailing operands derive from the
         per-layer StateSpecs: a block table when any layer pages KV, a
-        dense slot-id vector when any layer carries O(1) state."""
+        dense slot-id vector when any layer carries O(1) state.
+
+        With a :class:`~repro.serve.resilience.guard.StepGuard` armed
+        (``EngineConfig.fault_injector`` / ``.resilience``), the launch +
+        commit run under its retry/rollback/quarantine discipline; the
+        unguarded path below is byte-identical to the pre-resilience
+        engine."""
+        if self.guard is not None:
+            self.guard.pre_schedule()
         sd = self.scheduler.schedule()
         if sd is None:
+            if self.guard is not None:
+                self.guard.release_stolen()    # idle: no pages held hostage
             return False
         self._note_migration(sd)
-        B = sd.bucket
         chunk = self._chunk_len(sd.max_remaining)
         # speculative decoding replaces the pure-decode launch when any
         # slot yields a usable draft; on False (no drafts this round) the
-        # plain serve_step launch below runs unchanged
+        # plain serve_step launch below runs unchanged.  The spec path is
+        # NOT guarded: chaos runs disable speculation (docs/serving.md).
         if chunk is None and self.spec is not None and self.spec.step(sd):
             return True
+        if self.guard is not None:
+            return self.guard.step(sd, chunk)
+        rows, fed = self._launch(sd, chunk)
+        self._commit(sd, rows, fed)
+        self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
+        return True
+
+    def _launch(self, sd: ScheduledStep, chunk: Optional[int]):
+        """Build operands and enqueue ONE step kernel for ``sd``; returns
+        ``(rows, fed)`` — the materialized next-token logits rows and the
+        positions each slot consumed.  Mutates NO host request state, so a
+        guarded retry can simply call it again (the injector's ``launch``
+        site fires before the enqueue, ``device`` after)."""
+        B = sd.bucket
+        inj = self.engine_cfg.fault_injector
         pos = np.zeros((B,), np.int32)
         has_pages = self.store.needs_pages
         has_dense = self.store.has_dense
@@ -392,6 +439,8 @@ class ServingEngine:
                     fed[s] = 1
             ops = ([dev2(table)] if has_pages else []) \
                 + ([dev(slots)] if has_dense else [])
+            if inj is not None:
+                inj.fire("launch")
             logits, self.store.arena = self.queue.enqueue(
                 self._kernel(B), self.params, self.store.arena,
                 dev(tokens), dev(pos), *ops)
@@ -413,9 +462,15 @@ class ServingEngine:
                 fed[s] = n
             ops = ([dev2(table)] if has_pages else []) \
                 + ([dev(slots)] if has_dense else [])
+            if inj is not None:
+                inj.fire("launch")
             logits, self.store.arena = self.queue.enqueue(
                 self._chunk_kernel(B, chunk), self.params, self.store.arena,
                 dev2(tokens), dev(pos), dev(n_valid), *ops)
+        if inj is not None:
+            inj.fire("device")      # the enqueue "happened"; stats below
+            #                         only count steps that got this far
+        if chunk is not None:
             self.stats.prefill_chunk_launches += 1
         self.stats.steps += 1
         self.stats.peak_blocks_used = max(self.stats.peak_blocks_used,
@@ -428,8 +483,16 @@ class ServingEngine:
         else:
             self.stats.decode_launches += 1
         rows = np.asarray(logits[:, 0, :self.cfg.vocab_size])
+        return rows, fed
+
+    def _commit(self, sd: ScheduledStep, rows: np.ndarray, fed,
+                skip=frozenset()) -> None:
+        """Advance the request state machine with a successful launch's
+        results.  Slots in ``skip`` (guard-poisoned rows) advance NOTHING —
+        their pre-step snapshot was restored, so next step re-feeds the
+        same positions."""
         for s, r in enumerate(sd.slots):
-            if r is None:
+            if r is None or s in skip:
                 continue
             n = fed[s]
             # the launch fed seq_tokens[num_cached : num_cached + n]; its
@@ -443,6 +506,8 @@ class ServingEngine:
             self.stats.prompt_tokens_ingested += max(
                 0, min(prev_cached + n, len(r.prompt)) - prev_cached)
             r.num_cached += n
+            r.fault_failures = 0    # a committed step clears the quarantine
+            #                         count — "repeatedly" means consecutively
             self._publish_filled_pages(r, prev_cached, r.num_cached)
             self._maybe_publish_dense(r)
             if not will_sample:
@@ -460,8 +525,6 @@ class ServingEngine:
                 self._rngs.pop(r.request_id, None)
                 if self.spec is not None:
                     self.spec.release(r.request_id)
-        self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
-        return True
 
     def _note_migration(self, sd: ScheduledStep) -> None:
         """Bucket/slot churn is pure table bookkeeping now — the KV pages a
@@ -525,7 +588,32 @@ class ServingEngine:
             steps += 1
             if limit is not None and steps > limit:
                 raise RuntimeError(f"drain exceeded max_steps={limit}")
+        if self.guard is not None:
+            self.guard.release_stolen()
         self.queue.finish()
+
+    # -- graceful drain / restore ------------------------------------------
+
+    def drain_to(self, path: str) -> int:
+        """Graceful shutdown half: checkpoint every live request's resume
+        record to ``path`` (atomic JSON), then finish them all as
+        ``"drained"`` — pages and dense slots return to their pools, and a
+        fresh engine can :meth:`restore_from` the file to continue each
+        generation token-for-token.  Returns the number checkpointed."""
+        from repro.serve.resilience.checkpoint import checkpoint_requests
+        n = checkpoint_requests(self, path)
+        for r in self.scheduler.drain_all("drained"):
+            self._rngs.pop(r.request_id, None)
+            if self.spec is not None:
+                self.spec.release(r.request_id)
+        return n
+
+    def restore_from(self, path: str) -> list:
+        """Resubmit a drain checkpoint's requests into this engine (rng
+        states included); each resumes mid-generation via prompt+output
+        replay.  Returns the restored requests in re-admission order."""
+        from repro.serve.resilience.checkpoint import restore_requests
+        return restore_requests(self, path)
 
     def stream(self, prompt: Sequence[int],
                sampling: Optional[SamplingParams] = None) -> Iterator[int]:

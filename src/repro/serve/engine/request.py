@@ -11,8 +11,11 @@ A preempted request drops its KV blocks and re-enters WAITING with
 tokens through the step kernel (recompute-style preemption — no KV swap).
 Cancellation is legal from any non-terminal state and is recorded as
 ``finish_reason == "cancelled"``; an admission policy rejecting a WAITING
-request (TTFT deadline infeasible) finishes it as ``"shed"`` — the full
-``finish_reason`` vocabulary is {stop, length, cancelled, shed}.
+request (TTFT deadline infeasible) finishes it as ``"shed"``; the
+resilience layer quarantines a repeatedly-failing request as ``"error"``
+and a graceful service drain checkpoints live requests and finishes them
+as ``"drained"`` — the full ``finish_reason`` vocabulary is
+:data:`FINISH_REASONS` = {stop, length, cancelled, shed, error, drained}.
 """
 
 from __future__ import annotations
@@ -37,6 +40,14 @@ _TRANSITIONS = {
     RequestState.DECODE: {RequestState.WAITING, RequestState.FINISHED},
     RequestState.FINISHED: set(),
 }
+
+# The CLOSED vocabulary of terminal outcomes.  "stop"/"length" are natural
+# completions; the rest name which layer terminated the request early:
+# "cancelled" (client), "shed" (admission policy), "error" (resilience
+# quarantine: repeated step failures or non-finite logits), "drained"
+# (graceful service drain — the request was checkpointed, not lost).
+FINISH_REASONS = frozenset(
+    {"stop", "length", "cancelled", "shed", "error", "drained"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +112,9 @@ class Request:
         self.dense_snapshot = None
         self.finish_reason: Optional[str] = None
         self.n_preemptions = 0
+        # consecutive failed/poisoned steps (StepGuard bookkeeping); reset
+        # to 0 by every committed step, quarantined past the threshold
+        self.fault_failures = 0
         # perf_counter stamps for time-to-first-token (0.0 = not yet);
         # admit_t is the FIRST admission (queue-wait ends there — a later
         # preemption/re-admission is a scheduling event, not queue wait)
@@ -192,6 +206,9 @@ class Request:
         return None
 
     def finish(self, reason: str) -> None:
+        if reason not in FINISH_REASONS:
+            raise ValueError(f"unknown finish_reason {reason!r}; "
+                             f"vocabulary: {sorted(FINISH_REASONS)}")
         self.transition(RequestState.FINISHED)
         self.finish_reason = reason
         self.finish_t = time.perf_counter()

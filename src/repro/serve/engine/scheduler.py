@@ -213,6 +213,22 @@ class Scheduler:
         self._retire(request)
         request.finish(reason)
 
+    def drain_all(self, reason: str = "drained") -> List[Request]:
+        """Finish EVERY live request (running then waiting) with ``reason``,
+        releasing pages and dense slots through normal retirement — the
+        terminal half of a graceful drain (the caller checkpoints the
+        requests' progress first)."""
+        out: List[Request] = []
+        for r in list(self.running):
+            self._retire(r)
+            r.finish(reason)
+            out.append(r)
+        while self.waiting:
+            r = self.waiting.popleft()
+            r.finish(reason)
+            out.append(r)
+        return out
+
     def _retire(self, request: Request) -> None:
         self.running.remove(request)
         self.state.on_release(request, preempting=False)

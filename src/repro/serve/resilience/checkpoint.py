@@ -1,0 +1,127 @@
+"""Graceful drain/restore: checkpoint live requests to disk, resume later.
+
+The drain file captures exactly the HOST-side facts needed to resume a
+request mid-generation — prompt, tokens generated so far, sampling
+parameters, SLO metadata, and the numpy bit-generator state of its
+sampling rng.  Device state (KV pages, dense slots) is deliberately NOT
+checkpointed: the engine's recompute-preemption machinery already knows
+how to rebuild it.  A restored request re-enters WAITING with its
+generated tokens appended to the replay stream (``num_cached = 0``), so
+admission replays prompt + outputs through chunked prefill — adopting any
+published prompt-prefix pages along the way — and the next sampled token
+continues the sequence exactly where the drain cut it.  With greedy
+sampling the remaining tokens are therefore identical to what the
+original engine would have produced; with temperature sampling the saved
+rng state makes the continuation reproducible too.
+
+File format (version 1, plain JSON — inspectable and diffable)::
+
+    {"version": 1,
+     "requests": [{"request_id": "...", "prompt": [...],
+                   "output_tokens": [...],
+                   "sampling": {"max_tokens": ..., "temperature": ...,
+                                "eos_token_id": ..., "seed": ...},
+                   "priority": 0, "tenant": "default",
+                   "ttft_deadline_s": null, "n_preemptions": 0,
+                   "rng_state": {...} | null},
+                  ...]}
+
+Requests are recorded running-first (oldest admission first), then the
+waiting queue in order, and restored in the same order — so re-admission
+priority survives the round trip.  Restored TTFT deadlines restart from
+the new submit time (the old wall-clock is meaningless after a restart);
+``max_tokens`` counts TOTAL output tokens including the pre-drain ones.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.engine.request import Request, SamplingParams
+
+CHECKPOINT_VERSION = 1
+
+
+def request_record(req: Request,
+                   rng: Optional[np.random.Generator] = None) -> dict:
+    """The JSON-able resume record for one live request."""
+    sp = req.sampling
+    return {
+        "request_id": req.request_id,
+        "prompt": list(req.prompt),
+        "output_tokens": list(req.output_tokens),
+        "sampling": {"max_tokens": sp.max_tokens,
+                     "temperature": sp.temperature,
+                     "eos_token_id": sp.eos_token_id,
+                     "seed": sp.seed},
+        "priority": req.priority,
+        "tenant": req.tenant,
+        "ttft_deadline_s": req.ttft_deadline_s,
+        "n_preemptions": req.n_preemptions,
+        # bit-generator state is a plain dict of (big) ints and strings —
+        # JSON carries it losslessly, so a temperature>0 continuation
+        # draws the exact tokens the undrained engine would have
+        "rng_state": None if rng is None else rng.bit_generator.state,
+    }
+
+
+def thaw_request(rec: dict) -> Tuple[Request, Optional[dict]]:
+    """Rebuild a WAITING request (outputs pre-appended for replay) and its
+    saved rng state from one checkpoint record."""
+    req = Request(rec["prompt"],
+                  SamplingParams(**rec["sampling"]),
+                  request_id=rec["request_id"],
+                  priority=rec.get("priority", 0),
+                  tenant=rec.get("tenant", "default"),
+                  ttft_deadline_s=rec.get("ttft_deadline_s"))
+    req.output_tokens = [int(t) for t in rec.get("output_tokens", ())]
+    req.n_preemptions = int(rec.get("n_preemptions", 0))
+    return req, rec.get("rng_state")
+
+
+def checkpoint_requests(engine, path: str) -> int:
+    """Atomically write every live request (running first, then waiting)
+    to ``path``; returns the number checkpointed.  Pure read — the caller
+    decides whether to also finish the requests (drain) or keep going."""
+    recs = [request_record(r, engine._rngs.get(r.request_id))
+            for r in (*engine.scheduler.running, *engine.scheduler.waiting)]
+    payload = {"version": CHECKPOINT_VERSION, "requests": recs}
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)    # atomic: a crashed drain leaves no torn file
+    except BaseException:
+        os.unlink(tmp)
+        raise
+    return len(recs)
+
+
+def restore_requests(engine, path: str) -> List[Request]:
+    """Resubmit every checkpointed request into ``engine`` (same order the
+    drain recorded), restoring sampling rng states; returns the requests.
+    The engine replays prompt + prior outputs through chunked prefill and
+    continues generating from there."""
+    with open(path) as f:
+        payload = json.load(f)
+    version = payload.get("version")
+    if version != CHECKPOINT_VERSION:
+        raise ValueError(f"unsupported drain checkpoint version {version!r} "
+                         f"(expected {CHECKPOINT_VERSION})")
+    out: List[Request] = []
+    for rec in payload["requests"]:
+        req, rng_state = thaw_request(rec)
+        engine.submit_request(req)
+        if rng_state is not None:
+            rng = np.random.default_rng()
+            rng.bit_generator.state = rng_state
+            engine._rngs[req.request_id] = rng
+        out.append(req)
+    return out

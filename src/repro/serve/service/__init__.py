@@ -21,10 +21,11 @@ from repro.serve.service.admission import (DeadlineAdmission,
 from repro.serve.service.metrics import (RequestMetrics, ServiceMetrics,
                                          percentile)
 from repro.serve.service.service import (AdmissionRejected, GenerateService,
-                                         ServiceConfig, ServiceStream)
+                                         ServiceConfig, ServiceError,
+                                         ServiceStream)
 
 __all__ = [
     "AdmissionRejected", "DeadlineAdmission", "FairShareAdmission",
-    "GenerateService", "RequestMetrics", "ServiceConfig", "ServiceMetrics",
-    "ServiceStream", "make_policy", "percentile",
+    "GenerateService", "RequestMetrics", "ServiceConfig", "ServiceError",
+    "ServiceMetrics", "ServiceStream", "make_policy", "percentile",
 ]

@@ -39,7 +39,9 @@ class RequestMetrics:
     request_id: str
     tenant: str
     priority: int
-    finish_reason: str                  # stop | length | cancelled | shed
+    # one of engine.request.FINISH_REASONS:
+    # stop | length | cancelled | shed | error | drained
+    finish_reason: str
     n_tokens: int
     ttft_s: Optional[float]             # None when no token was produced
     queue_wait_s: Optional[float]       # None when never admitted (shed)
@@ -62,6 +64,8 @@ class ServiceMetrics:
         self.n_shed = 0                 # policy rejections (admission layer)
         self.n_rejected = 0             # backpressure rejections (never a
         #                                 Request: max_pending was hit)
+        self.n_error = 0                # resilience quarantines ("error")
+        self.n_drained = 0              # graceful-drain checkpoints ("drained")
         self.n_tokens = 0
         # speculative decoding (stay 0 when the engine runs without it):
         # lifetime draft-token counters mirrored from EngineStats deltas
@@ -100,6 +104,10 @@ class ServiceMetrics:
                 self.n_cancelled += 1
             elif rm.finish_reason == "shed":
                 self.n_shed += 1
+            elif rm.finish_reason == "error":
+                self.n_error += 1
+            elif rm.finish_reason == "drained":
+                self.n_drained += 1
             self.n_tokens += rm.n_tokens
             if rm.ttft_s is not None:
                 self._ttft.append(rm.ttft_s)
@@ -120,6 +128,8 @@ class ServiceMetrics:
                 "cancelled": self.n_cancelled,
                 "shed": self.n_shed,
                 "rejected": self.n_rejected,
+                "error": self.n_error,
+                "drained": self.n_drained,
                 "tokens": self.n_tokens,
                 "ttft_s": self._stats(self._ttft),
                 "itl_s": self._stats(self._itl),

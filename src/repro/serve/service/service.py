@@ -57,6 +57,30 @@ class AdmissionRejected(RuntimeError):
         self.reason = reason
 
 
+class ServiceError(RuntimeError):
+    """The engine thread died (uncaught exception) or was declared hung by
+    the watchdog.  Every open :class:`ServiceStream` ends by raising this,
+    ``submit()`` after the fact fails fast with it, and ``stop()``
+    re-raises it — the failure is delivered everywhere a client could be
+    waiting, never swallowed on a background thread."""
+
+
+def _resolve(loop, fut, value=None, exc=None) -> None:
+    """Resolve an asyncio future from the engine/watchdog thread (no-op if
+    the awaiting client already went away)."""
+    def _set():
+        if fut.done():
+            return
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(value)
+    try:
+        loop.call_soon_threadsafe(_set)
+    except RuntimeError:
+        pass    # loop already closed: the awaiting client is gone
+
+
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     max_pending: int = 64        # in-flight bound (submitted, not finished)
@@ -65,10 +89,18 @@ class ServiceConfig:
     # deadline by this much); ignored by the other policies
     est_ttft_s: float = 0.0
     idle_wait_s: float = 0.002   # engine-thread sleep when no work/commands
+    # hung-step detection: a watchdog thread declares the service dead
+    # (ServiceError to every client) when ONE engine.step() exceeds this
+    # many seconds.  None disables the watchdog.  Size it generously —
+    # first-step executable compilation counts against the deadline.
+    watchdog_timeout_s: Optional[float] = None
 
     def __post_init__(self):
         if self.max_pending < 1:
             raise ValueError(f"max_pending must be >= 1: {self.max_pending}")
+        if self.watchdog_timeout_s is not None and self.watchdog_timeout_s <= 0:
+            raise ValueError(
+                f"watchdog_timeout_s must be > 0: {self.watchdog_timeout_s}")
 
 
 class ServiceStream:
@@ -127,7 +159,11 @@ class ServiceStream:
 
     # engine thread -> client queue (must hop through the loop)
     def _push(self, item) -> None:
-        self._service._loop.call_soon_threadsafe(self._q.put_nowait, item)
+        try:
+            self._service._loop.call_soon_threadsafe(self._q.put_nowait, item)
+        except RuntimeError:
+            pass    # loop already closed (e.g. an abandoned wedged thread
+            #         finally exiting): nobody is listening anymore
 
 
 class _StreamState:
@@ -183,6 +219,13 @@ class GenerateService:
         self._stop_evt = threading.Event()
         self._wake = threading.Event()
         self._error: Optional[BaseException] = None
+        self._draining = False           # drain() stops admission first
+        # watchdog heartbeat: monotonic stamp while engine.step() runs,
+        # None between steps (written by the engine thread, read by the
+        # watchdog thread — a single attribute store, no lock needed)
+        self._step_started: Optional[float] = None
+        self._watchdog: Optional[threading.Thread] = None
+        self._watchdog_fired = False
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -193,16 +236,31 @@ class GenerateService:
         self._thread = threading.Thread(target=self._run,
                                         name="engine-loop", daemon=True)
         self._thread.start()
+        if self.config.watchdog_timeout_s is not None:
+            self._watchdog = threading.Thread(target=self._watch,
+                                              name="engine-watchdog",
+                                              daemon=True)
+            self._watchdog.start()
         return self
 
     async def stop(self) -> None:
-        """Stop the engine thread; outstanding streams end 'cancelled'."""
+        """Stop the engine thread; outstanding streams end 'cancelled'.
+        Re-raises the engine/watchdog error when the service died."""
         if self._thread is None:
             return
         self._stop_evt.set()
         self._wake.set()
-        await asyncio.get_running_loop().run_in_executor(
-            None, self._thread.join)
+        loop = asyncio.get_running_loop()
+        if self._watchdog_fired:
+            # the engine thread may be wedged inside a step forever:
+            # bounded join, then abandon the daemon thread — its clients
+            # were already failed by the watchdog
+            await loop.run_in_executor(None, self._thread.join, 1.0)
+        else:
+            await loop.run_in_executor(None, self._thread.join)
+        if self._watchdog is not None:
+            await loop.run_in_executor(None, self._watchdog.join)
+            self._watchdog = None
         self._thread = None
         if self._error is not None:
             raise self._error
@@ -230,6 +288,13 @@ class GenerateService:
         """
         if self._thread is None:
             raise RuntimeError("service not started")
+        if self._error is not None or not self._thread.is_alive():
+            # fail fast instead of enqueueing into a command queue no one
+            # will ever service (the client would hang forever)
+            raise ServiceError("engine thread is dead") from self._error
+        if self._draining:
+            self.metrics.on_rejected()
+            raise AdmissionRejected("service is draining")
         with self._inflight_lock:
             if self._inflight >= self.config.max_pending:
                 self.metrics.on_rejected()
@@ -255,6 +320,37 @@ class GenerateService:
         self._send(("submit", handle))
         return handle
 
+    async def drain(self, path: str) -> int:
+        """Graceful drain: stop admission, checkpoint every waiting and
+        running request's resume record to ``path`` (atomic JSON), end
+        their streams with ``finish_reason == "drained"``, and stop the
+        service.  Returns the number of requests checkpointed; a fresh
+        service over a fresh engine can :meth:`restore` them."""
+        if self._thread is None:
+            raise RuntimeError("service not started")
+        if self._error is not None or not self._thread.is_alive():
+            raise ServiceError("engine thread is dead") from self._error
+        self._draining = True            # submit() rejects from here on
+        fut = asyncio.get_running_loop().create_future()
+        self._send(("drain", (path, fut)))
+        n = await fut
+        await self.stop()
+        return n
+
+    async def restore(self, path: str) -> List[ServiceStream]:
+        """Resume a drain checkpoint on this (started, fresh) service:
+        every checkpointed request is resubmitted mid-generation and gets
+        a live :class:`ServiceStream` that yields only its NEW tokens
+        (the pre-drain ones are already in ``stream.request.output_tokens``
+        and will be part of the final completion)."""
+        if self._thread is None:
+            raise RuntimeError("service not started")
+        if self._error is not None or not self._thread.is_alive():
+            raise ServiceError("engine thread is dead") from self._error
+        fut = asyncio.get_running_loop().create_future()
+        self._send(("restore", (path, fut)))
+        return await fut
+
     def _cancel(self, request_id: str) -> None:
         self._send(("cancel", request_id))
 
@@ -277,7 +373,11 @@ class GenerateService:
                 self._drain_commands()
                 progressed = False
                 if self.engine.scheduler.has_work:
+                    # heartbeat for the watchdog: stamped only while a
+                    # step is actually in flight
+                    self._step_started = time.monotonic()
                     progressed = self.engine.step()
+                    self._step_started = None
                 self._pump()
                 if not progressed and self._cmd.empty():
                     self._wake.wait(timeout=self.config.idle_wait_s)
@@ -287,6 +387,23 @@ class GenerateService:
         finally:
             self._shutdown_streams()
 
+    def _watch(self) -> None:
+        """Watchdog thread: declare the service dead when one engine step
+        overstays ``watchdog_timeout_s``.  The stuck engine thread cannot
+        deliver the bad news itself, so the watchdog fails every connected
+        stream directly and trips the stop event."""
+        t = self.config.watchdog_timeout_s
+        while not self._stop_evt.wait(timeout=min(t / 4, 0.05)):
+            t0 = self._step_started
+            if t0 is not None and time.monotonic() - t0 > t:
+                self._watchdog_fired = True
+                self._error = ServiceError(
+                    f"watchdog: engine step exceeded {t}s deadline")
+                for st in list(self._streams.values()):
+                    st.handle._push(("err", self._error))
+                self._stop_evt.set()
+                return
+
     def _drain_commands(self) -> None:
         while True:
             try:
@@ -295,10 +412,44 @@ class GenerateService:
                 return
             if op == "submit":
                 handle: ServiceStream = arg
-                self.engine.submit_request(handle.request)
+                try:
+                    self.engine.submit_request(handle.request)
+                except BaseException as e:
+                    # intake failed AFTER the command left the queue: the
+                    # handle is registered nowhere, so deliver the error
+                    # here or the client blocks forever
+                    self._finished()
+                    handle._push(("err", e))
+                    raise
                 self._streams[handle.request_id] = _StreamState(handle)
             elif op == "cancel":
                 self.engine.cancel(arg)     # no-op if already finished
+            elif op == "drain":
+                path, fut = arg
+                try:
+                    n = self.engine.drain_to(path)
+                    self._pump()    # flush the "drained" completions now
+                    _resolve(self._loop, fut, value=n)
+                except BaseException as e:
+                    _resolve(self._loop, fut, exc=e)
+            elif op == "restore":
+                path, fut = arg
+                try:
+                    handles = []
+                    for r in self.engine.restore_from(path):
+                        handle = ServiceStream(self, r)
+                        st = _StreamState(handle)
+                        # pre-drain tokens were delivered by the previous
+                        # incarnation: stream only the new ones
+                        st.emitted = len(r.output_tokens)
+                        self._streams[r.request_id] = st
+                        with self._inflight_lock:
+                            self._inflight += 1
+                        self.metrics.on_submitted()
+                        handles.append(handle)
+                    _resolve(self._loop, fut, value=handles)
+                except BaseException as e:
+                    _resolve(self._loop, fut, exc=e)
 
     def _pump(self) -> None:
         """Forward newly sampled tokens to their client queues; finalize
@@ -337,18 +488,41 @@ class GenerateService:
 
     def _shutdown_streams(self) -> None:
         """Engine-thread exit: cancel whatever is still live so pages and
-        dense slots return to their pools, then flush the final pumps."""
+        dense slots return to their pools, then flush the final pumps.
+        When the thread died with an error, EVERY place a client could be
+        blocked gets woken with it: open streams, submits still sitting in
+        the command queue (never registered), and pending drain/restore
+        futures — nobody hangs on a dead engine."""
         for rid in list(self._streams):
             try:
-                self.engine.cancel(rid)
+                self.engine.cancel(rid)     # resources back either way
             except Exception:
                 pass
-        try:
-            self._pump()
-        except Exception:
-            pass
+        if self._error is None:
+            # clean stop: finalize the cancellations normally
+            try:
+                self._pump()
+            except Exception:
+                pass
+        else:
+            # died: every connected stream ends by RAISING the error (not
+            # a quiet "cancelled"), and returns its in-flight slot
+            for st in self._streams.values():
+                self._finished()
+                st.handle._push(("err", self._error))
+            self._streams.clear()
+        err = self._error or ServiceError("service stopped")
+        while True:
+            try:
+                op, arg = self._cmd.get_nowait()
+            except queue.Empty:
+                break
+            if op == "submit":
+                self._finished()            # its in-flight slot, back
+                arg._push(("err", err))
+            elif op in ("drain", "restore"):
+                _resolve(self._loop, arg[1], exc=err)
         # anything STILL unfinished (cancel failed) gets an error sentinel
-        err = self._error or RuntimeError("service stopped")
         for st in self._streams.values():
             st.handle._push(("err", err))
         self._streams.clear()

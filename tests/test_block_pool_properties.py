@@ -18,6 +18,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serve.engine.block_cache import (BlockPool,  # noqa: E402
                                             PoolExhausted, SequenceBlocks)
+from repro.serve.resilience import FaultInjector  # noqa: E402
 
 S = settings(deadline=None, max_examples=60)
 
@@ -167,6 +168,79 @@ def test_rewind_generations_monotone_and_stale_prefixes_dead(data):
     other.release_all()
     _check_invariants(pool)
     assert pool.n_free == pool.n_blocks
+
+
+@S
+@given(st.data())
+def test_invariants_hold_under_injected_pool_exhaustion(data):
+    """Chaos extension: interleave the resilience layer's pool-pressure
+    fault (a seeded :class:`FaultInjector` stealing up to ``n_free`` pages
+    and holding them for a bounded number of ticks, exactly as
+    ``StepGuard.pre_schedule`` does) with the sequence ops above.  Under
+    ANY interleaving:
+
+      * every structural invariant holds at every step;
+      * a failed ``ensure`` during the induced exhaustion is atomic;
+      * generation counters stay monotone across steal/release cycles;
+      * a quarantined sequence (``release_all`` mid-flight, the page half
+        of ``StepGuard._quarantine``) returns every page immediately;
+      * after the injector's hold expires and all references drop, the
+        free list is whole again — injected faults never leak pages.
+    """
+    n = data.draw(st.integers(2, 10), label="n_blocks")
+    stride = data.draw(st.integers(1, 4), label="stride")
+    pool = BlockPool(n, stride)
+    inj = FaultInjector(
+        data.draw(st.integers(0, 2 ** 16), label="seed"),
+        {"pool": data.draw(st.sampled_from([0.5, 1.0]), label="rate")},
+        pool_steal_frac=data.draw(st.sampled_from([0.5, 0.9, 1.0]),
+                                  label="frac"),
+        pool_hold_steps=data.draw(st.integers(1, 4), label="hold"))
+    seq = SequenceBlocks(pool)
+    n_tokens = 0
+    stolen, release_tick, tick = [], 0, 0
+    gens = list(pool._gen)
+    for _ in range(data.draw(st.integers(0, 40), label="n_ops")):
+        tick += 1
+        if stolen and tick >= release_tick:      # hold expired
+            for bid in stolen:
+                pool.release(bid)
+            stolen = []
+        op = data.draw(st.sampled_from(
+            ["ensure", "rewind", "inject", "quarantine"]), label="op")
+        if op == "inject" and not stolen:
+            n_steal, hold = inj.pool_steal(pool.n_free)
+            assert 0 <= n_steal <= pool.n_free   # never over-steals
+            stolen = [pool.alloc() for _ in range(n_steal)]
+            release_tick = tick + hold
+        elif op == "ensure":
+            grow = data.draw(st.integers(0, 2 * stride), label="grow")
+            try:
+                seq.ensure(n_tokens + grow)
+                n_tokens += grow
+            except PoolExhausted:
+                # atomic under injected pressure: capacity unchanged,
+                # nothing half-allocated
+                assert len(seq.ids) == pool.blocks_for(n_tokens)
+        elif op == "rewind" and n_tokens:
+            cut = data.draw(st.integers(0, n_tokens), label="cut")
+            seq.rewind(cut)
+            n_tokens = cut
+        elif op == "quarantine" and seq.ids:
+            before_free = pool.n_free
+            pages = len(seq.ids)
+            seq.release_all()
+            n_tokens = 0
+            assert pool.n_free == before_free + pages
+        for b in range(n):
+            assert pool._gen[b] >= gens[b], f"generation moved backwards {b}"
+        gens = list(pool._gen)
+        _check_invariants(pool)
+    for bid in stolen:
+        pool.release(bid)
+    seq.release_all()
+    _check_invariants(pool)
+    assert pool.n_free == pool.n_blocks          # faults never leak pages
 
 
 @S

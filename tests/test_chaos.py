@@ -1,0 +1,279 @@
+"""Chaos-hardened serving: deterministic fault injection end to end.
+
+The load-bearing assertion extends the repo's parity invariant to the
+failure domain: a retried step re-runs identical math and a rolled-back
+slot re-feeds identical positions, so every request that SURVIVES a
+seeded fault schedule must produce token-for-token the greedy output of
+a fault-free engine — and every request that does not survive must end
+terminally as ``finish_reason == "error"``, with all pool/slot
+accounting drained to zero either way.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import (EngineConfig, SamplingParams, build_engine,
+                                generate)
+from repro.serve.resilience import (FaultInjected, FaultInjector,
+                                    ResilienceConfig)
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32,
+           attn_block_kv=32)
+ATTN = ModelConfig(name="att", family="dense", d_model=64, n_layers=2,
+                   n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128, **F32)
+HYBRID = ModelConfig(
+    name="hyb", family="hybrid", d_model=64, n_layers=2, n_heads=8,
+    n_kv_heads=4, d_ff=128, vocab_size=128, d_inner=128, ssm_heads=8,
+    ssm_headdim=16, ssm_state=16, ssm_groups=4,
+    layer_pattern=(("attn", "mlp"), ("mamba", "mlp")), sub_quadratic=True,
+    **F32)
+S_MAX = 32
+
+
+def _engine(cfg, mesh, plan, **kw):
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("max_steps", 2000)      # hang valve: chaos must terminate
+    ec = EngineConfig(s_max=S_MAX, block_pos_stride=4, **kw)
+    return build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
+
+
+def _prompts(cfg, n, rng_seed=0, lo=2, hi=12):
+    rng = np.random.default_rng(rng_seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+def _assert_drained(eng):
+    """Pool/slot accounting must return to zero after any chaos run."""
+    assert eng.pool.n_free == eng.pool.n_blocks
+    if eng.store.slot_pool is not None:
+        assert eng.store.slot_pool.n_used == 0
+
+
+# -- the injector itself (no mesh needed) -----------------------------------
+
+def test_injector_is_deterministic():
+    """Same seed + same query sequence -> byte-identical fault schedule
+    (the property every parity assertion below stands on)."""
+    def schedule(seed):
+        inj = FaultInjector(seed, {"launch": 0.3, "nan_logits": 0.2})
+        hits = []
+        for i in range(50):
+            try:
+                inj.fire("launch")
+            except FaultInjected as e:
+                hits.append(("launch", i, e.enqueued))
+            if inj.corrupt_row(f"r{i}"):
+                hits.append(("nan", i))
+        return hits, inj.counts()
+
+    a, ca = schedule(11)
+    b, cb = schedule(11)
+    c, _ = schedule(12)
+    assert a == b and ca == cb
+    assert a and a != c                  # fires, and the seed matters
+    assert all(not enq for (_, _, enq) in
+               [h for h in a if h[0] == "launch"])
+
+
+def test_injector_validates_and_caps():
+    with pytest.raises(ValueError, match="unknown injection sites"):
+        FaultInjector(0, {"gpu_on_fire": 1.0})
+    with pytest.raises(ValueError, match="must be in"):
+        FaultInjector(0, {"launch": 1.5})
+    inj = FaultInjector(0, {"launch": 1.0}, max_faults=3)
+    fired = 0
+    for _ in range(10):
+        try:
+            inj.fire("launch")
+        except FaultInjected:
+            fired += 1
+    assert fired == 3 and inj.n_fired == 3    # liveness valve holds
+    # device-site faults tell the guard the enqueue happened
+    inj2 = FaultInjector(0, {"device": 1.0})
+    with pytest.raises(FaultInjected) as ei:
+        inj2.fire("device")
+    assert ei.value.enqueued and ei.value.site == "device"
+
+
+# -- guarded engine behavior -------------------------------------------------
+
+def test_transient_launch_faults_keep_greedy_parity(mesh16, plan16):
+    """Launch faults below the retry budget are invisible: token-for-token
+    greedy parity with the fault-free engine, retries counted."""
+    ref = _engine(ATTN, mesh16, plan16)
+    prompts = _prompts(ATTN, 4)
+    expect = generate(ref, prompts, SamplingParams(max_tokens=6))
+
+    inj = FaultInjector(5, {"launch": 0.25, "device": 0.15}, max_faults=30)
+    eng = _engine(ATTN, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig())
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=6))
+    assert inj.n_fired > 0 and eng.stats.fault_retries > 0
+    for g, e in zip(got, expect):
+        assert g.finish_reason != "error"     # budget covers p=0.25 streaks
+        assert g.tokens == e.tokens
+    _assert_drained(eng)
+
+
+def test_device_fault_drains_failed_enqueue_before_retry(mesh16, plan16):
+    """A device-site fault means the enqueue HAPPENED: the guard must
+    drain the failed launch before the retry donates its output arena.
+    Regression for 'BlockHostUntilReady() called on deleted or donated
+    buffer' on page-only configs, where the rollback has no dense slots
+    to restore and used to skip the clFinish entirely."""
+    ref = _engine(ATTN, mesh16, plan16)
+    prompts = _prompts(ATTN, 3, rng_seed=6)
+    expect = generate(ref, prompts, SamplingParams(max_tokens=5))
+
+    inj = FaultInjector(0, {"device": 1.0}, max_faults=3)
+    eng = _engine(ATTN, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig())
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=5))
+    # all three capped faults land on one step: two in-step retries, then
+    # exhaustion charges the batch once; the injector is spent, so the
+    # step's redo succeeds and every request still reaches full parity
+    assert inj.n_fired == 3
+    assert eng.stats.fault_launch_failures == 3
+    assert eng.stats.fault_retries == 2
+    for g, e in zip(got, expect):
+        assert g.finish_reason != "error"
+        assert g.tokens == e.tokens
+    _assert_drained(eng)
+
+
+def test_retry_exhaustion_quarantines_every_cohabitant(mesh16, plan16):
+    """A permanently failing launch site charges the whole batch; every
+    request terminates as "error" instead of hanging the engine."""
+    inj = FaultInjector(0, {"launch": 1.0})
+    eng = _engine(ATTN, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig(max_request_failures=1))
+    got = generate(eng, _prompts(ATTN, 3), SamplingParams(max_tokens=4))
+    assert [g.finish_reason for g in got] == ["error"] * 3
+    assert all(g.tokens == [] for g in got)
+    assert eng.stats.fault_quarantined == 3
+    assert eng.stats.tokens_generated == 0
+    _assert_drained(eng)
+
+
+def test_nan_quarantine_spares_batchmates(mesh16, plan16):
+    """With max_request_failures=0 the first poisoned row quarantines its
+    request immediately — and ONLY its request: batch-mates keep decoding
+    to full greedy parity."""
+    ref = _engine(ATTN, mesh16, plan16)
+    prompts = _prompts(ATTN, 3)
+    expect = generate(ref, prompts, SamplingParams(max_tokens=6))
+
+    inj = FaultInjector(0, {"nan_logits": 1.0}, max_faults=1)
+    eng = _engine(ATTN, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig(max_request_failures=0))
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=6))
+    errs = [g for g in got if g.finish_reason == "error"]
+    assert len(errs) == 1 and eng.stats.fault_quarantined == 1
+    for g, e in zip(got, expect):
+        if g.finish_reason != "error":
+            assert g.tokens == e.tokens and g.finish_reason == e.finish_reason
+    _assert_drained(eng)
+
+
+def test_nan_rollback_refeeds_same_position(mesh16, plan16):
+    """Below the quarantine threshold a poisoned row only costs a retry:
+    the slot re-feeds the same position next step and the final tokens
+    match the fault-free run exactly (per-slot rollback correctness —
+    exercised on the HYBRID config so the dense snapshot/restore path
+    runs, not just the causally-masked paged one)."""
+    ref = _engine(HYBRID, mesh16, plan16)
+    prompts = _prompts(HYBRID, 2, rng_seed=3)
+    expect = generate(ref, prompts, SamplingParams(max_tokens=5))
+
+    inj = FaultInjector(0, {"nan_logits": 1.0}, max_faults=2)
+    eng = _engine(HYBRID, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig(max_request_failures=3))
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=5))
+    assert eng.stats.fault_nonfinite == 2
+    assert eng.stats.fault_quarantined == 0
+    for g, e in zip(got, expect):
+        assert g.tokens == e.tokens
+    _assert_drained(eng)
+
+
+def test_pool_pressure_faults_preserve_liveness(mesh16, plan16):
+    """Injected pool exhaustion forces preemption/blocked admission but can
+    never wedge the engine: the steal bound keeps the largest sequence
+    admissible, so everything still finishes with greedy parity."""
+    ref = _engine(ATTN, mesh16, plan16)
+    prompts = _prompts(ATTN, 6, rng_seed=2)
+    expect = generate(ref, prompts, SamplingParams(max_tokens=6))
+
+    inj = FaultInjector(9, {"pool": 0.6}, pool_steal_frac=0.9,
+                        pool_hold_steps=3, max_faults=50)
+    eng = _engine(ATTN, mesh16, plan16, fault_injector=inj)
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=6))
+    assert eng.stats.fault_pool_steals > 0
+    for g, e in zip(got, expect):
+        assert g.tokens == e.tokens
+    _assert_drained(eng)
+
+
+# -- the seeded chaos soak ---------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [ATTN, HYBRID], ids=["attn", "hybrid"])
+def test_chaos_soak(cfg, mesh16, plan16):
+    """Random (seeded) fault schedule over a mixed workload: no hang,
+    every accepted request terminal, accounting drains to zero, and every
+    fault-free-surviving request keeps token-for-token greedy parity."""
+    ref = _engine(cfg, mesh16, plan16)
+    prompts = _prompts(cfg, 8, rng_seed=7)
+    expect = generate(ref, prompts, SamplingParams(max_tokens=6))
+
+    inj = FaultInjector(
+        1234,
+        {"launch": 0.10, "device": 0.08, "nan_logits": 0.04,
+         "pool": 0.08, "stall": 0.03},
+        stall_s=0.001, max_faults=60)
+    eng = _engine(cfg, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig(max_request_failures=2))
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=6))
+
+    assert inj.n_fired > 0                       # the soak actually soaked
+    for g, e in zip(got, expect):
+        assert g.finish_reason is not None       # terminal, no limbo
+        if g.finish_reason == "error":
+            continue                             # quarantined: allowed
+        assert g.tokens == e.tokens              # survivors: exact parity
+        assert g.finish_reason == e.finish_reason
+    _assert_drained(eng)
+    # the schedule is reproducible: same seed -> same fired-fault counts
+    inj2 = FaultInjector(
+        1234,
+        {"launch": 0.10, "device": 0.08, "nan_logits": 0.04,
+         "pool": 0.08, "stall": 0.03},
+        stall_s=0.001, max_faults=60)
+    eng2 = _engine(cfg, mesh16, plan16, fault_injector=inj2,
+                   resilience=ResilienceConfig(max_request_failures=2))
+    eng2.params = ref.params
+    got2 = generate(eng2, prompts, SamplingParams(max_tokens=6))
+    assert inj2.counts() == inj.counts()
+    assert [g.tokens for g in got2] == [g.tokens for g in got]
+    assert [g.finish_reason for g in got2] == [g.finish_reason for g in got]
+
+
+def test_unguarded_engine_unchanged(mesh16, plan16):
+    """No injector, no resilience config -> no guard object at all: the
+    fault counters stay zero and the plain path serves as before."""
+    eng = _engine(ATTN, mesh16, plan16)
+    assert eng.guard is None
+    got = generate(eng, _prompts(ATTN, 2), SamplingParams(max_tokens=4))
+    assert all(g.finish_reason == "length" for g in got)
+    assert eng.stats.fault_launch_failures == 0
+    assert eng.stats.fault_quarantined == 0
