@@ -380,6 +380,138 @@ def run_faults(report, json_path="auto", config=None, timestamp=None,
     return degradation
 
 
+def run_prefix(report, json_path="auto", config=None, timestamp=None,
+               kernel_backend=None, seed=0, requests=8, smoke=False):
+    """Paired cache-off/cache-on full passes over one shared-prefix
+    workload; appends BOTH records (``prefix_cache`` "off" / "on") to the
+    trajectory.
+
+    The workload is the radix cache's home turf: every request is a shared
+    system prefix (whole KV pages) plus a short distinct tail, served twice
+    — a warm pass (which for the cache-on engine also populates the tree)
+    and a timed pass.  Three explicit raises (not asserts) gate the pair:
+
+      * greedy parity — cache-on must emit token-for-token what cache-off
+        emits (adopted pages ARE the KV the off engine recomputes);
+      * the cache-on pass must land prefix hits (smoke: hit rate > 0; full
+        runs: >= 0.5 — the shared prefix dominates each prompt);
+      * strictly fewer prefill launches cache-on than cache-off (adopted
+        pages skip prefill entirely, not just kernel work).
+    """
+    if json_path == "auto":
+        json_path = None if smoke else JSON_PATH
+    if kernel_backend is None:
+        from repro.kernels import default_kernel_backend
+        kernel_backend = default_kernel_backend()
+    cfg = _bench_config(config)
+    mesh = jax.make_mesh((1, 16), (DATA, MODEL),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+    rng = np.random.default_rng(seed)
+    if smoke:
+        requests, sys_tokens, tail, max_tokens = 4, 16, 8, 4
+    else:
+        sys_tokens, tail, max_tokens = 48, 8, 8
+    sys_prefix = rng.integers(0, cfg.vocab_size, size=sys_tokens).tolist()
+    prompts = [sys_prefix
+               + rng.integers(0, cfg.vocab_size, size=tail).tolist()
+               for _ in range(requests)]
+    sampling = [SamplingParams(max_tokens=max_tokens)] * requests
+
+    results = {}
+    for label in ("off", "on"):
+        ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8),
+                          block_pos_stride=8, kernel_backend=kernel_backend,
+                          prefix_cache=(label == "on"))
+        eng = build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
+        # warm pass: compiles every executable AND (cache-on) populates the
+        # radix tree, so the timed pass measures steady-state serving with
+        # a resident shared prefix; counters reset in between
+        generate(eng, prompts, sampling)
+        eng.stats = EngineStats()
+        eng.queue.max_depth = 0
+        for ev in eng.kernel_events().values():
+            ev.launches = 0
+            ev.first_enqueue_t = ev.last_enqueue_t = ev.last_done_t = 0.0
+        outs = generate(eng, prompts, sampling)
+        st = eng.stats
+        results[label] = {
+            "outs": [c.tokens for c in outs],
+            "stats": st,
+            "tok_s": eng.throughput_tok_s(),
+            "n_blocks": eng.pool.n_blocks,
+        }
+        report(f"serve.prefix.{label}.tokens_per_sec",
+               f"{results[label]['tok_s']:.1f}",
+               f"{st.tokens_generated} tokens, {st.steps} launches")
+        report(f"serve.prefix.{label}.prefill_launches",
+               st.prefill_launches,
+               f"{st.prompt_tokens_ingested} prompt tokens ingested")
+        if label == "on":
+            report("serve.prefix.on.hit_rate", f"{st.prefix_hit_rate:.3f}",
+                   f"{st.prefix_tokens_reused} tokens reused via "
+                   f"{st.prefix_hits} page hits, "
+                   f"{st.prefix_evictions} evictions")
+
+    if results["off"]["outs"] != results["on"]["outs"]:
+        raise RuntimeError(
+            "prefix-cache greedy decode must match cache-off greedy "
+            "token-for-token on the same seed")
+    report("serve.prefix.greedy_parity", "ok",
+           "cache-on == cache-off token-for-token")
+    st_on, st_off = results["on"]["stats"], results["off"]["stats"]
+    hit_rate = st_on.prefix_hit_rate
+    floor = 0.0 if smoke else 0.5
+    if not st_on.prefix_hits or hit_rate <= floor:
+        raise RuntimeError(
+            f"shared-prefix workload must hit the radix cache "
+            f"(hit rate {hit_rate:.3f} <= {floor}, "
+            f"{st_on.prefix_hits} hits)")
+    launch_delta = st_off.prefill_launches - st_on.prefill_launches
+    if launch_delta <= 0:
+        raise RuntimeError(
+            f"adopted prefix pages must eliminate prefill launches: "
+            f"on={st_on.prefill_launches} vs off={st_off.prefill_launches}")
+    report("serve.prefix.prefill_launches_saved", launch_delta,
+           f"{st_off.prompt_tokens_ingested - st_on.prompt_tokens_ingested}"
+           f" prompt tokens never re-prefilled")
+
+    if json_path:
+        stamp = timestamp or datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds")
+        for label, r in results.items():
+            st = r["stats"]
+            payload = {
+                "bench": "serve_throughput",
+                "config": cfg.name,
+                "kernel_backend": kernel_backend,
+                "seed": seed,
+                "timestamp": stamp,
+                "mode": "prefix",
+                "prefix_cache": label,
+                "requests": requests,
+                "sys_tokens": sys_tokens,
+                "tokens_per_sec": round(r["tok_s"], 2),
+                "tokens_generated": st.tokens_generated,
+                "steps": st.steps,
+                "prefill_launches": st.prefill_launches,
+                "prefill_launch_delta_vs_off": launch_delta
+                if label == "on" else None,
+                "prompt_tokens_ingested": st.prompt_tokens_ingested,
+                "decode_launches": st.decode_launches,
+                "prefix_hits": st.prefix_hits,
+                "prefix_tokens_reused": st.prefix_tokens_reused,
+                "prefix_evictions": st.prefix_evictions,
+                "prefix_hit_rate": round(hit_rate, 4)
+                if label == "on" else None,
+                "peak_kv_blocks_used": st.peak_blocks_used,
+            }
+            n = _append_trajectory(json_path, payload)
+        report("serve.prefix.json", os.path.relpath(json_path),
+               f"paired records appended ({n} total)")
+    return hit_rate
+
+
 def _oracle_rounds(prefix, cont, k, ngram_max, ngram_min=1):
     """Verify launches a prompt-lookup drafter needs to emit ``cont`` after
     ``prefix`` (greedy parity makes the token stream drafter-independent, so
@@ -608,6 +740,15 @@ def main():
                     help="workload size for --speculation")
     ap.add_argument("--spec-tokens", type=int, default=32,
                     help="per-request max_tokens for --speculation")
+    ap.add_argument("--prefix-workload", action="store_true",
+                    help="run the PAIRED cache-off/cache-on pass over a "
+                         "shared-system-prefix workload; appends two "
+                         "records and enforces greedy parity, a radix "
+                         "cache hit-rate floor, and strictly fewer "
+                         "prefill launches cache-on (--steps downgrades "
+                         "the hit-rate floor to > 0)")
+    ap.add_argument("--prefix-requests", type=int, default=8,
+                    help="workload size for --prefix-workload")
     args = ap.parse_args()
     print("name,value,derived")
 
@@ -618,6 +759,13 @@ def main():
         run_faults(report, json_path=args.json or "auto",
                    config=args.config, timestamp=args.timestamp,
                    kernel_backend=args.kernel_backend, seed=args.seed,
+                   smoke=args.steps is not None)
+        return
+    if args.prefix_workload:
+        run_prefix(report, json_path=args.json or "auto",
+                   config=args.config, timestamp=args.timestamp,
+                   kernel_backend=args.kernel_backend, seed=args.seed,
+                   requests=args.prefix_requests,
                    smoke=args.steps is not None)
         return
     if args.speculation:

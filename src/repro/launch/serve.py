@@ -81,6 +81,12 @@ def main():
                          "in one verify_bs{N} launch")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens per slot per verify launch")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="cross-request radix prefix cache for "
+                         "--engine/--service: on = shared token-block "
+                         "prefixes adopt resident KV pages at admission; "
+                         "off = pure free-list allocation (the parity "
+                         "baseline)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -142,6 +148,7 @@ def _build_engine(cfg, mesh, plan, args):
     chunks = tuple(int(c) for c in args.prefill_chunks.split(",") if c)
     ec_kw = {} if args.kernel_backend is None \
         else {"kernel_backend": args.kernel_backend}
+    ec_kw["prefix_cache"] = getattr(args, "prefix_cache", "on") != "off"
     if getattr(args, "speculation", "off") != "off":
         from repro.serve.spec import SpeculationConfig
         ec_kw["speculation"] = SpeculationConfig(
@@ -197,6 +204,11 @@ def _main_engine(cfg, mesh, plan, args):
               f"{st.spec_accepted_tokens} accepted "
               f"(accept rate {st.spec_accept_rate:.2f}, "
               f"{st.spec_rollbacks} rollbacks)")
+    if st.prefix_hits or st.prefix_evictions:
+        print(f"  prefix cache: {st.prefix_hits} page hits, "
+              f"{st.prefix_tokens_reused} prompt tokens reused "
+              f"(hit rate {st.prefix_hit_rate:.2f}), "
+              f"{st.prefix_evictions} evictions")
 
 
 def _main_service(cfg, mesh, plan, args):

@@ -8,7 +8,8 @@ Layering (host side of the paper's OpenCL analogy):
         scheduler.Scheduler   bucketed admission / preemption policy,
                               prefix-page adoption
           block_cache.BlockPool   physical KV pages (ref-counts, free list,
-                                  generation-checked prefix cache)
+                                  radix prefix cache w/ generation-checked
+                                  revival — repro.serve.prefix)
           request.Request     WAITING -> PREFILL -> DECODE -> FINISHED
 
 The KV cache is ONE physically paged arena shared by every batch bucket
@@ -29,12 +30,14 @@ from repro.serve.engine.scheduler import (AdmissionPolicy, FifoAdmission,
                                           ScheduledStep, Scheduler,
                                           SchedulerConfig)
 from repro.serve.engine.state_store import NullStateHook, StateStore
+from repro.serve.prefix import RadixNode, RadixPrefixCache
 
 __all__ = [
     "AdmissionPolicy", "BlockLayout", "BlockPool", "Completion",
     "DenseSlotPool", "EngineConfig", "EngineStats", "FINISH_REASONS",
     "FifoAdmission",
-    "NullStateHook", "PoolExhausted", "Request", "RequestState",
+    "NullStateHook", "PoolExhausted", "RadixNode", "RadixPrefixCache",
+    "Request", "RequestState",
     "SamplingParams", "ScheduledStep", "Scheduler", "SchedulerConfig",
     "SequenceBlocks", "ServingEngine", "StateStore", "block_layout",
     "build_engine", "completion_of", "generate",

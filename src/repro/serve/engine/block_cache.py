@@ -11,14 +11,20 @@ The pool is the host-side ownership layer over that arena:
   * ref-counts — pages are shared by forked sequences and identical prompt
                  prefixes (the sharing is physical: one page, many tables),
                  and recycled through a free list on last release;
-  * prefixes   — ``publish_prefix``/``lookup_prefix`` map full-page prompt
-                 prefixes to resident pages.  A freed page keeps its prefix
-                 entries until the page is *reallocated* (a per-page
-                 generation counter detects recycling), so a later identical
-                 prompt can revive it and adopt the KV already in device
-                 memory — nothing ever zeroes arena pages, and stale
+  * prefixes   — published full pages feed a :class:`RadixPrefixCache`
+                 (``repro.serve.prefix``): a trie keyed on stride-sized
+                 token blocks, one node per resident page.  Matching any
+                 shared token-block prefix is a single O(P) walk
+                 (``match_prefix``), and adoption (``adopt_prefix``) hands
+                 back retained pages.  A freed page whose node is cached
+                 stays OFF the free list until the cache evicts it
+                 (leaf-first LRU, after uncached free pages run out), so a
+                 later request sharing the prefix revives the KV already in
+                 device memory — nothing ever zeroes arena pages, and stale
                  contents past a sequence's position are causally masked
-                 in-kernel;
+                 in-kernel.  Per-page generation counters still guard every
+                 revival.  ``prefix_cache=False`` disables all of it: pure
+                 free-list allocation, the parity baseline;
   * layout     — :func:`block_layout` derives the per-page device footprint
                  from the same ``paged_cache_specs`` shapes the kernels
                  compile against, so occupancy-in-bytes tracks the real
@@ -31,7 +37,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, List, Optional, Sequence, Tuple
+
+from repro.serve.prefix import RadixPrefixCache
 
 
 class PoolExhausted(Exception):
@@ -97,10 +105,11 @@ def block_layout(cfg, plan, *, block_pos_stride: int,
 
 class BlockPool:
     """Fixed pool of physical KV pages: ref-counting, free-list recycling,
-    generation-checked prefix caching."""
+    radix-tree prefix caching with generation-checked revival."""
 
     def __init__(self, n_blocks: int, block_pos_stride: int,
-                 layout: Optional[BlockLayout] = None):
+                 layout: Optional[BlockLayout] = None,
+                 prefix_cache: bool = True):
         if n_blocks < 1:
             raise ValueError("n_blocks must be >= 1")
         if block_pos_stride < 1:
@@ -108,50 +117,62 @@ class BlockPool:
         self.n_blocks = n_blocks
         self.block_pos_stride = block_pos_stride
         self.layout = layout
-        # deque: alloc pops the right, release appends the LEFT (O(1)), so
-        # freed prefix-cached pages are recycled last
+        # uncached free pages only: a freed page whose prefix node is still
+        # cached lives in the tree's evictable set instead, and re-enters
+        # this deque only as an eviction/orphan.  alloc pops the right,
+        # release appends the LEFT (O(1)), so recently-freed uncached pages
+        # are recycled last
         self._free: Deque[int] = deque(range(n_blocks - 1, -1, -1))
         self._refs: List[int] = [0] * n_blocks
         self._gen: List[int] = [0] * n_blocks
-        # prefix key -> (page id, generation at publish time); the reverse
-        # index lets alloc() evict a recycled page's stale keys in O(keys)
-        self._prefix: Dict[Tuple[int, ...], Tuple[int, int]] = {}
-        self._published: List[List[Tuple[int, ...]]] = \
-            [[] for _ in range(n_blocks)]
+        self.cache: Optional[RadixPrefixCache] = \
+            RadixPrefixCache(self) if prefix_cache else None
+        # monotone counters; the engine folds deltas into EngineStats
+        self.n_prefix_hits = 0
+        self.n_prefix_tokens_reused = 0
+        self.n_prefix_evictions = 0
 
     # -- capacity ----------------------------------------------------------
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Pages an allocation burst can obtain: the uncached free list
+        plus every cached page reclaimable by repeated leaf eviction."""
+        n = len(self._free)
+        if self.cache is not None:
+            n += self.cache.n_reclaimable
+        return n
 
     @property
     def n_used(self) -> int:
-        return self.n_blocks - len(self._free)
+        """Pages referenced by live sequences (cached-but-free pages are
+        reclaimable, so they count as free capacity, not residency)."""
+        return self.n_blocks - self.n_free
 
     def blocks_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache positions."""
         return -(-n_tokens // self.block_pos_stride) if n_tokens > 0 else 0
 
     def can_alloc(self, n: int) -> bool:
-        return len(self._free) >= n
+        return self.n_free >= n
 
     # -- alloc / free ------------------------------------------------------
 
     def alloc(self) -> int:
-        if not self._free:
-            raise PoolExhausted(
-                f"all {self.n_blocks} KV blocks in use")
-        bid = self._free.pop()
+        if self._free:
+            bid = self._free.pop()
+        else:
+            # free list dry: evict the LRU cached leaf.  This is the
+            # ordering contract — uncached pages are always recycled before
+            # any cached prefix KV is sacrificed, and within the cache cold
+            # leaves go before hot interior (shared) nodes.
+            bid = self.cache.evict_one() if self.cache is not None else None
+            if bid is None:
+                raise PoolExhausted(
+                    f"all {self.n_blocks} KV blocks in use")
+            self.n_prefix_evictions += 1
         self._refs[bid] = 1
         self._gen[bid] += 1     # any KV previously resident here is dead
-        # evict the recycled page's prefix entries eagerly — the map must
-        # not grow with the number of distinct prompts ever served
-        for key in self._published[bid]:
-            ent = self._prefix.get(key)
-            if ent is not None and ent[0] == bid:
-                del self._prefix[key]
-        self._published[bid] = []
         return bid
 
     def retain(self, bid: int) -> int:
@@ -165,61 +186,106 @@ class BlockPool:
             raise ValueError(f"double free of block {bid}")
         self._refs[bid] -= 1
         if self._refs[bid] == 0:
-            # bottom of the free deque: freed pages are recycled LAST,
-            # keeping their (still-valid) prefix KV revivable for as long
-            # as capacity allows
-            self._free.appendleft(bid)
+            node = self.cache.claimant(bid) if self.cache is not None \
+                else None
+            if node is not None:
+                # prefix-cached: keep the page out of the free list so its
+                # KV stays revivable; the tree now owns its recycling order
+                self.cache.on_freed(node)
+            else:
+                self._free.appendleft(bid)
 
     def refcount(self, bid: int) -> int:
         return self._refs[bid]
 
     # -- prefix sharing ----------------------------------------------------
     #
-    # Keys are full token tuples of the positions a page covers.  A lookup
-    # hit hands back the page with a fresh reference: the adopting sequence
-    # points its block table at the SAME physical page, so identical prompt
-    # prefixes (and `fork()` siblings) share device memory, not just
-    # accounting.
+    # Published keys are the full token prefixes a page completes, always a
+    # whole number of stride-sized blocks; the tree stores one block per
+    # node, so retention is O(distinct blocks) regardless of how many
+    # prompts were ever served.  An adoption hands back pages with fresh
+    # references: the adopting sequence points its block table at the SAME
+    # physical pages, so any requests sharing a token-block prefix (and
+    # `fork()` siblings) share device memory, not just accounting.
+
+    def match_prefix(self, prompt: Sequence[int],
+                     n_max: Optional[int] = None) -> Tuple[int, List[bool]]:
+        """Longest cached block-prefix of ``prompt``: one O(P) root-down
+        walk.  Returns ``(n_pages, revive_flags)`` where ``revive_flags[i]``
+        says adopting page i would revive a freed page.  Pure read — the
+        admission peek.  ``n_max`` caps the depth; the default stops short
+        of the final token so an admitted sequence always has at least one
+        position to prefill."""
+        if self.cache is None:
+            return 0, []
+        if n_max is None:
+            n_max = (len(prompt) - 1) // self.block_pos_stride
+        nodes = self.cache.match(prompt, n_max)
+        return len(nodes), [self._refs[n.page] == 0 for n in nodes]
+
+    def adopt_prefix(self, prompt: Sequence[int], n: int) -> List[int]:
+        """Retain the first ``n`` matched prefix pages of ``prompt`` and
+        return their ids (the admission commit for a peeked match)."""
+        if n <= 0 or self.cache is None:
+            return []
+        nodes = self.cache.match(prompt, n, touch=True)
+        if len(nodes) < n:
+            # peek and adopt run back-to-back in one admission step with no
+            # allocation in between, so the match cannot shrink
+            raise RuntimeError(
+                f"prefix match shrank between peek and adopt: "
+                f"wanted {n}, found {len(nodes)}")
+        return [self._adopt_node(node) for node in nodes]
+
+    def _adopt_node(self, node) -> int:
+        bid = node.page
+        if self._refs[bid] > 0:
+            self._refs[bid] += 1
+        else:
+            # freed but still cached: revive in O(1) — evictable pages are
+            # not on the free list, so no O(n) free-list surgery
+            self._refs[bid] = 1
+            self.cache.on_live(node)
+        self.n_prefix_hits += 1
+        self.n_prefix_tokens_reused += self.block_pos_stride
+        return bid
 
     def publish_prefix(self, key: Tuple[int, ...], bid: int) -> None:
+        """Cache ``bid`` as the page completing token prefix ``key`` (must
+        be a whole number of blocks).  Pages orphaned by the insert (a free
+        page losing its only claim) drop back to the free list."""
         if self._refs[bid] <= 0:
             raise ValueError(f"publishing free block {bid}")
+        if self.cache is None:
+            return
         key = tuple(key)
-        prev = self._prefix.get(key)
-        self._prefix[key] = (bid, self._gen[bid])
-        if prev != (bid, self._gen[bid]):   # re-publish: no duplicate index
-            self._published[bid].append(key)
+        if not key or len(key) % self.block_pos_stride:
+            raise ValueError(
+                f"prefix key must be a whole number of "
+                f"{self.block_pos_stride}-token blocks, got {len(key)}")
+        for orphan in self.cache.publish(key, bid, self._gen[bid]):
+            self._free.appendleft(orphan)
 
     def peek_prefix(self, key: Tuple[int, ...]) -> Optional[bool]:
         """Would :meth:`lookup_prefix` hit?  Returns None on a miss, else
-        whether the hit would REVIVE a freed page (consuming a free slot).
-        Pure read: no refcount, free-list or map mutation — schedulers use
-        it to cost an admission before committing to page retention."""
-        ent = self._prefix.get(tuple(key))
-        if ent is None:
+        whether the hit would REVIVE a freed page.  Pure read: no refcount,
+        free-list or tree mutation."""
+        if self.cache is None:
             return None
-        bid, gen = ent
-        if gen != self._gen[bid]:
+        node = self.cache.node_at(tuple(key))
+        if node is None:
             return None
-        return self._refs[bid] == 0
+        return self._refs[node.page] == 0
 
     def lookup_prefix(self, key: Tuple[int, ...]) -> Optional[int]:
-        ent = self._prefix.get(tuple(key))
-        if ent is None:
+        """Exact-key adoption of one page (single-page form of
+        :meth:`adopt_prefix`): a hit retains and returns the page."""
+        if self.cache is None:
             return None
-        bid, gen = ent
-        if gen != self._gen[bid]:
-            del self._prefix[tuple(key)]    # page was recycled: KV is gone
+        node = self.cache.node_at(tuple(key), touch=True)
+        if node is None:
             return None
-        if self._refs[bid] > 0:
-            return self.retain(bid)
-        # freed but not yet recycled: revive it straight off the free list.
-        # remove() is O(n_blocks), but runs only on the admission path (once
-        # per adopted-revived page, never per token) — not worth the ghost-
-        # entry bookkeeping an O(1) scheme needs at realistic pool sizes
-        self._free.remove(bid)
-        self._refs[bid] = 1
-        return bid
+        return self._adopt_node(node)
 
 
 class DenseSlotPool:

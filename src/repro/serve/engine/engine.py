@@ -30,8 +30,9 @@ Decode-phase slots ride through the same launch with ``n_valid = 1``, so
 mixed prefill/decode batches remain the norm; pure-decode batches use the
 cheap one-position ``serve_step_bs{N}`` executable.  As prefill fills full
 prompt pages the engine publishes them (several per chunk, possibly) to the
-pool's prefix map, so identical prompts — including ``fork()`` siblings —
-adopt the same physical pages at admission and resume mid-chunk.
+pool's radix prefix cache, so ANY request sharing a token-block prefix —
+identical prompts, ``fork()`` siblings, distinct prompts behind one system
+prompt — adopts the same physical pages at admission and resumes mid-chunk.
 """
 
 from __future__ import annotations
@@ -78,6 +79,10 @@ class EngineConfig:
     # dense state slots (DenseSpec layers); None = max bucket.  Irrelevant
     # for attention-only models.
     n_dense_slots: Optional[int] = None
+    # cross-request radix prefix cache (repro.serve.prefix).  False turns
+    # the pool into a pure free-list allocator — no publication, matching
+    # or cached-page retention — the parity baseline for the cache.
+    prefix_cache: bool = True
     # kernel selection for every step executable: "jnp" (materialized-gather
     # reference paths), "pallas" (fused paged-attention + Pallas SSD scan;
     # interpret auto-selected off-TPU) or "pallas-interpret" (interpreter
@@ -137,6 +142,19 @@ class EngineStats:
     fault_quarantined: int = 0            # requests finished as "error"
     fault_pool_steals: int = 0            # injected pool-pressure episodes
     fault_stalls: int = 0                 # injected step stalls
+    # radix prefix cache (0 everywhere with prefix_cache=False)
+    prefix_hits: int = 0                  # pages adopted at admission
+    prefix_tokens_reused: int = 0         # prompt positions never prefilled
+    prefix_evictions: int = 0             # cached pages recycled under pressure
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Prompt tokens served from cached pages / total prompt tokens
+        offered (reused + actually ingested).  0.0 before any prompt."""
+        total = self.prefix_tokens_reused + self.prompt_tokens_ingested
+        if not total:
+            return 0.0
+        return self.prefix_tokens_reused / total
 
     @property
     def spec_accept_rate(self) -> float:
@@ -212,7 +230,8 @@ class ServingEngine:
 
         layout = block_layout(cfg, plan, block_pos_stride=ec.block_pos_stride,
                               mode="paged")
-        self.pool = BlockPool(n_blocks, ec.block_pos_stride, layout=layout)
+        self.pool = BlockPool(n_blocks, ec.block_pos_stride, layout=layout,
+                              prefix_cache=ec.prefix_cache)
         # the device state arena + dense slot lifecycle live in the store;
         # ONE allocation for the engine's lifetime, donated through every
         # enqueue.  Pages are never zeroed (stale KV past a slot's position
@@ -221,7 +240,7 @@ class ServingEngine:
         self.store = StateStore(
             mesh, self.state_specs, n_blocks=n_blocks,
             n_slots=ec.n_dense_slots or ec.buckets[-1],
-            stride=ec.block_pos_stride)
+            stride=ec.block_pos_stride, pool=self.pool)
         self.scheduler = Scheduler(self.pool, SchedulerConfig(ec.buckets),
                                    state=self.store)
 
@@ -232,6 +251,10 @@ class ServingEngine:
         self._bucket: Optional[int] = None
         self._rngs: Dict[str, np.random.Generator] = {}
         self.stats = EngineStats()
+        # pool prefix counters are monotone for the pool's lifetime; the
+        # engine folds DELTAS into stats so `eng.stats = EngineStats()`
+        # resets (benchmark warmup) stay correct
+        self._prefix_seen = (0, 0, 0)
         self.spec = None
         if ec.speculation is not None:
             # deferred import: spec builds on the engine package, so a
@@ -388,27 +411,33 @@ class ServingEngine:
         commit run under its retry/rollback/quarantine discipline; the
         unguarded path below is byte-identical to the pre-resilience
         engine."""
-        if self.guard is not None:
-            self.guard.pre_schedule()
-        sd = self.scheduler.schedule()
-        if sd is None:
+        try:
             if self.guard is not None:
-                self.guard.release_stolen()    # idle: no pages held hostage
-            return False
-        self._note_migration(sd)
-        chunk = self._chunk_len(sd.max_remaining)
-        # speculative decoding replaces the pure-decode launch when any
-        # slot yields a usable draft; on False (no drafts this round) the
-        # plain serve_step launch below runs unchanged.  The spec path is
-        # NOT guarded: chaos runs disable speculation (docs/serving.md).
-        if chunk is None and self.spec is not None and self.spec.step(sd):
+                self.guard.pre_schedule()
+            sd = self.scheduler.schedule()
+            if sd is None:
+                if self.guard is not None:
+                    self.guard.release_stolen()  # idle: no pages held hostage
+                return False
+            self._note_migration(sd)
+            chunk = self._chunk_len(sd.max_remaining)
+            # speculative decoding replaces the pure-decode launch when any
+            # slot yields a usable draft; on False (no drafts this round) the
+            # plain serve_step launch below runs unchanged.  The spec path is
+            # NOT guarded: chaos runs disable speculation (docs/serving.md).
+            if chunk is None and self.spec is not None and self.spec.step(sd):
+                return True
+            if self.guard is not None:
+                return self.guard.step(sd, chunk)
+            rows, fed = self._launch(sd, chunk)
+            self._commit(sd, rows, fed)
+            self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
             return True
-        if self.guard is not None:
-            return self.guard.step(sd, chunk)
-        rows, fed = self._launch(sd, chunk)
-        self._commit(sd, rows, fed)
-        self.queue.finish()     # clFinish: stamps KernelEvent.last_done_t
-        return True
+        finally:
+            # every prefix-cache mutation (admission adoption, eviction
+            # under allocation pressure, guard pool steals) happens inside
+            # a step — fold the pool's counter deltas on every exit path
+            self._fold_prefix_stats()
 
     def _launch(self, sd: ScheduledStep, chunk: Optional[int]):
         """Build operands and enqueue ONE step kernel for ``sd``; returns
@@ -525,6 +554,19 @@ class ServingEngine:
                 self._rngs.pop(r.request_id, None)
                 if self.spec is not None:
                     self.spec.release(r.request_id)
+
+    def _fold_prefix_stats(self) -> None:
+        """Fold the pool's monotone prefix counters into ``stats`` as
+        deltas (reset-tolerant: a freshly assigned EngineStats just resumes
+        accumulating from the current pool totals)."""
+        p = self.pool
+        cur = (p.n_prefix_hits, p.n_prefix_tokens_reused,
+               p.n_prefix_evictions)
+        seen = self._prefix_seen
+        self.stats.prefix_hits += cur[0] - seen[0]
+        self.stats.prefix_tokens_reused += cur[1] - seen[1]
+        self.stats.prefix_evictions += cur[2] - seen[2]
+        self._prefix_seen = cur
 
     def _note_migration(self, sd: ScheduledStep) -> None:
         """Bucket/slot churn is pure table bookkeeping now — the KV pages a

@@ -262,28 +262,15 @@ class Scheduler:
 
     def _peek_shared_prefix(self, request: Request) -> Tuple[int, List[bool]]:
         """(adoptable pages, per-page would-revive flags) for the longest
-    published full-prompt-page run — a pure read, so a blocked admission
-    can be costed every schedule() without retain/release churn.  Capped
-    strictly before the final prompt token — that token must still be fed
-    to produce the first logits."""
-        stride = self.pool.block_pos_stride
-        prompt = request.prompt
-        n = 0
-        revive: List[bool] = []
-        for t in range((len(prompt) - 1) // stride):
-            hit = self.pool.peek_prefix(tuple(prompt[:(t + 1) * stride]))
-            if hit is None:
-                break
-            n += 1
-            revive.append(bool(hit))
-        return n, revive
+    cached token-block prefix — one radix walk, a pure read, so a blocked
+    admission can be costed every schedule() without retain/release churn.
+    Capped strictly before the final prompt token — that token must still
+    be fed to produce the first logits."""
+        return self.pool.match_prefix(request.prompt)
 
     def _shared_prefix_pages(self, request: Request, n: int) -> List[int]:
         """Retain (or revive) the first ``n`` peeked prefix pages."""
-        stride = self.pool.block_pos_stride
-        prompt = request.prompt
-        return [self.pool.lookup_prefix(tuple(prompt[:(t + 1) * stride]))
-                for t in range(n)]
+        return self.pool.adopt_prefix(request.prompt, n)
 
     # -- the policy --------------------------------------------------------
 

@@ -28,7 +28,7 @@ dense machinery compiled out (:class:`NullStateHook` semantics).
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -45,10 +45,20 @@ class StateStore:
     """One engine's resident device state + its lifecycle operations."""
 
     def __init__(self, mesh, specs: ModelStateSpecs, *, n_blocks: int,
-                 n_slots: int, stride: int, max_prefix_snapshots: int = 64):
+                 n_slots: int, stride: int, max_prefix_snapshots: int = 64,
+                 pool=None):
         self.mesh = mesh
         self.specs = specs
         self.stride = stride
+        # hybrid configs key dense snapshots by the SAME radix tree node
+        # that owns the prefix's last KV page, so the two state kinds can
+        # never disagree about which prefixes are adoptable — and the dense
+        # side of a prefix dies exactly when its pages are evicted.
+        # Page-free (pure ssm) configs, and pools without a cache, keep the
+        # token-tuple FIFO map.
+        self._tree = pool.cache if (pool is not None and specs.has_paged
+                                    and pool.cache is not None) else None
+        self._snap_nodes: "deque" = deque()   # FIFO cap over tree snapshots
         self.cpspecs = specs.arena_pspecs()
         self._shardings = jax.tree.map(
             lambda sp: NamedSharding(mesh, sp), self.cpspecs)
@@ -114,6 +124,15 @@ class StateStore:
         if self.needs_pages:
             cap = min(cap, page_cap)
         prompt = request.prompt
+        if self._tree is not None:
+            # hybrid: ONE radix walk, then the deepest matched node that
+            # also carries a dense snapshot (page adoption below the dense
+            # resume point is wasted, so the deepest joint point wins)
+            nodes = self._tree.match(prompt, cap // self.stride)
+            for d in range(len(nodes), 0, -1):
+                if nodes[d - 1].dense_snap is not None:
+                    return d * self.stride
+            return 0
         for b in range(cap, 0, -self.stride):
             if tuple(prompt[:b]) in self._prefix:
                 return b
@@ -134,6 +153,9 @@ class StateStore:
             if request.dense_snapshot is not None \
                     and request.dense_snapshot[0] == resume:
                 snap = request.dense_snapshot[1]
+            elif self._tree is not None:
+                node = self._tree.node_at(tuple(request.prompt[:resume]))
+                snap = node.dense_snap if node is not None else None
             else:
                 snap = self._prefix.get(tuple(request.prompt[:resume]))
             assert snap is not None, \
@@ -173,12 +195,31 @@ class StateStore:
 
     def publish_dense_prefix(self, key: Tuple[int, ...], slot: int) -> None:
         key = tuple(key)
+        if self._tree is not None:
+            # ride the page tree: the snapshot attaches to the node owning
+            # the prefix's last page.  No node means the page chain was
+            # already evicted — a dense snapshot there could never be
+            # adopted (plan_resume only looks at matched nodes), skip it.
+            node = self._tree.node_at(key)
+            if node is None:
+                return
+            if node.dense_snap is None:
+                self._snap_nodes.append(node)
+            node.dense_snap = self.read_slot(slot)
+            while len(self._snap_nodes) > self._max_prefix:
+                old = self._snap_nodes.popleft()
+                if not old.detached:
+                    old.dense_snap = None
+            return
         self._prefix[key] = self.read_slot(slot)
         self._prefix.move_to_end(key)
         while len(self._prefix) > self._max_prefix:
             self._prefix.popitem(last=False)
 
     def has_dense_prefix(self, key: Tuple[int, ...]) -> bool:
+        if self._tree is not None:
+            node = self._tree.node_at(tuple(key))
+            return node is not None and node.dense_snap is not None
         return tuple(key) in self._prefix
 
     # -- device slot ops ----------------------------------------------------

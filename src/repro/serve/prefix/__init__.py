@@ -1,0 +1,12 @@
+"""Cross-request prefix cache: radix tree over published KV pages.
+
+``RadixPrefixCache`` is constructed and owned by
+:class:`repro.serve.engine.block_cache.BlockPool` (one per engine); the
+scheduler, engine and state store reach it through the pool's prefix API
+(``match_prefix`` / ``adopt_prefix`` / ``publish_prefix``) rather than
+importing this package directly.  See docs/serving.md §Radix prefix cache.
+"""
+
+from repro.serve.prefix.radix import RadixNode, RadixPrefixCache
+
+__all__ = ["RadixNode", "RadixPrefixCache"]

@@ -41,12 +41,15 @@ from repro.serve.engine.scheduler import AdmissionPolicy, FifoAdmission
 class DeadlineAdmission(AdmissionPolicy):
     """Earliest-TTFT-deadline-first with shed-on-infeasible.
 
-    ``est_ttft_s`` is the policy's lower bound on submit-to-first-token for
-    a freshly admitted request (prefill time): a waiting request is
-    *infeasible* — and shed — once ``now + est_ttft_s`` passes its absolute
-    deadline.  The default 0.0 sheds only already-blown deadlines; a
-    service that has measured its prefill p50 can pass it here to shed
-    earlier and waste less queue time on lost causes.
+    The feasibility bound on submit-to-first-token is, whenever the
+    service has bound live telemetry (:meth:`bind`), a *measured* rolling
+    estimate: the ``ServiceMetrics`` per-prompt-token prefill EMA scaled by
+    the request's prompt length MINUS its radix-matched prefix tokens
+    (cached pages are adopted, not prefilled, so a warm shared prefix makes
+    an otherwise-infeasible request feasible again).  ``est_ttft_s`` stays
+    as a static floor — and is the whole estimate before the first
+    observation, or when the policy runs unbound (engine-only tests, page-
+    free configs).  The default 0.0 sheds only already-blown deadlines.
     """
 
     name = "deadline"
@@ -55,6 +58,26 @@ class DeadlineAdmission(AdmissionPolicy):
         if est_ttft_s < 0:
             raise ValueError(f"est_ttft_s must be >= 0, got {est_ttft_s}")
         self.est_ttft_s = float(est_ttft_s)
+        self._metrics = None
+        self._pool = None
+
+    def bind(self, engine, metrics) -> None:
+        """Attach live telemetry: the service calls this once after
+        installing the policy on its engine's scheduler."""
+        self._metrics = metrics
+        self._pool = engine.pool if engine.store.needs_pages else None
+
+    def _est(self, r: Request) -> float:
+        per_token = self._metrics.prefill_estimate() \
+            if self._metrics is not None else None
+        if per_token is None:
+            return self.est_ttft_s
+        matched = 0
+        if self._pool is not None:
+            n_pages, _ = self._pool.match_prefix(r.prompt)
+            matched = n_pages * self._pool.block_pos_stride
+        remaining = max(0, len(r.prompt) - matched)
+        return max(self.est_ttft_s, per_token * remaining)
 
     def _deadline(self, r: Request) -> float:
         d = r.deadline_t
@@ -62,7 +85,7 @@ class DeadlineAdmission(AdmissionPolicy):
 
     def shed(self, waiting: Sequence[Request], now: float) -> List[Request]:
         return [r for r in waiting
-                if now + self.est_ttft_s > self._deadline(r)]
+                if now + self._est(r) > self._deadline(r)]
 
     def select(self, waiting: Sequence[Request], running: Sequence[Request],
                now: float, blocked: Set[str]) -> Optional[Request]:

@@ -46,6 +46,7 @@ class RequestMetrics:
     ttft_s: Optional[float]             # None when no token was produced
     queue_wait_s: Optional[float]       # None when never admitted (shed)
     itl_s: List[float]                  # inter-token gaps (len n_tokens - 1)
+    n_prompt_tokens: int = 0            # prompt length (prefill-cost scale)
 
     @property
     def itl_mean_s(self) -> Optional[float]:
@@ -72,6 +73,18 @@ class ServiceMetrics:
         self.n_spec_proposed = 0
         self.n_spec_accepted = 0
         self.n_spec_rejected = 0
+        # radix prefix cache (stay 0 with prefix_cache=False): lifetime
+        # counters mirrored from EngineStats deltas by the service pump
+        self.n_prefix_hits = 0
+        self.n_prefix_tokens_reused = 0
+        self.n_prefix_evictions = 0
+        self.n_prompt_tokens_ingested = 0
+        # rolling per-token prefill time: EMA over finished requests of
+        # (TTFT - queue wait) / prompt tokens.  The deadline admission
+        # policy reads it (via prefill_estimate) to replace its static
+        # est_ttft_s with a measured prefill-cost model.
+        self._prefill_ema: Optional[float] = None
+        self._prefill_alpha = 0.25
         self._ttft: Deque[float] = deque(maxlen=window)
         self._itl: Deque[float] = deque(maxlen=window)
         self._queue_wait: Deque[float] = deque(maxlen=window)
@@ -95,9 +108,33 @@ class ServiceMetrics:
             self.n_spec_accepted += accepted
             self.n_spec_rejected += rejected
 
+    def on_prefix(self, hits: int, tokens_reused: int, evictions: int,
+                  ingested: int) -> None:
+        """Fold one pump's EngineStats delta of prefix-cache outcomes in."""
+        with self._lock:
+            self.n_prefix_hits += hits
+            self.n_prefix_tokens_reused += tokens_reused
+            self.n_prefix_evictions += evictions
+            self.n_prompt_tokens_ingested += ingested
+
+    def prefill_estimate(self) -> Optional[float]:
+        """Rolling seconds-per-prompt-token prefill estimate (None until a
+        first-token latency has been observed)."""
+        with self._lock:
+            return self._prefill_ema
+
     def observe(self, rm: RequestMetrics) -> None:
         with self._lock:
             self.records.append(rm)
+            if rm.ttft_s is not None and rm.n_prompt_tokens > 0:
+                # queue wait is dead time, not prefill work: subtract it so
+                # the estimate prices compute, and a loaded queue does not
+                # inflate the shed threshold into a death spiral
+                wait = rm.queue_wait_s or 0.0
+                sample = max(0.0, rm.ttft_s - wait) / rm.n_prompt_tokens
+                a = self._prefill_alpha
+                self._prefill_ema = sample if self._prefill_ema is None \
+                    else (1.0 - a) * self._prefill_ema + a * sample
             if rm.finish_reason in ("stop", "length"):
                 self.n_completed += 1
             elif rm.finish_reason == "cancelled":
@@ -142,6 +179,18 @@ class ServiceMetrics:
                         self.n_spec_accepted / self.n_spec_proposed
                         if self.n_spec_proposed else None),
                 },
+                "prefix_cache": {
+                    "hits": self.n_prefix_hits,
+                    "tokens_reused": self.n_prefix_tokens_reused,
+                    "evictions": self.n_prefix_evictions,
+                    "hit_rate": (
+                        self.n_prefix_tokens_reused
+                        / (self.n_prefix_tokens_reused
+                           + self.n_prompt_tokens_ingested)
+                        if self.n_prefix_tokens_reused
+                        + self.n_prompt_tokens_ingested else None),
+                },
+                "prefill_s_per_token": self._prefill_ema,
             }
 
     @staticmethod

@@ -202,12 +202,19 @@ class GenerateService:
             policy = make_policy(self.config.admission, **kw)
         self.policy = policy
         engine.scheduler.admission = policy     # install the scheduler hook
+        bind = getattr(policy, "bind", None)
+        if bind is not None:
+            # policies that model admission cost (deadline) get live
+            # telemetry: the metrics prefill EMA + the engine's prefix
+            # cache for matched-token discounts
+            bind(engine, self.metrics)
         self._cmd: "queue.Queue[Tuple[str, object]]" = queue.Queue()
         self._streams: dict = {}                # engine-thread owned
         # last-seen speculative EngineStats counters (engine-thread owned):
         # _pump folds the deltas into ServiceMetrics so snapshots track
         # acceptance live, even if the engine stats are reset between runs
         self._spec_seen = (0, 0, 0)
+        self._prefix_seen = (0, 0, 0, 0)        # same, for prefix-cache stats
         # in-flight counter crosses threads: incremented at submit (loop
         # side), decremented at finalize (engine side) BEFORE the "end"
         # sentinel is pushed — so when a client sees its stream end, the
@@ -463,6 +470,15 @@ class GenerateService:
             self.metrics.on_speculation(cur[0] - seen[0], cur[1] - seen[1],
                                         cur[2] - seen[2])
             self._spec_seen = cur
+        pcur = (es.prefix_hits, es.prefix_tokens_reused, es.prefix_evictions,
+                es.prompt_tokens_ingested)
+        if pcur != self._prefix_seen:
+            pseen = self._prefix_seen if all(
+                c >= s for c, s in zip(pcur, self._prefix_seen)) \
+                else (0, 0, 0, 0)
+            self.metrics.on_prefix(pcur[0] - pseen[0], pcur[1] - pseen[1],
+                                   pcur[2] - pseen[2], pcur[3] - pseen[3])
+            self._prefix_seen = pcur
         now = time.perf_counter()
         done = []
         for rid, st in self._streams.items():
@@ -482,7 +498,8 @@ class GenerateService:
                 request_id=r.request_id, tenant=r.tenant,
                 priority=r.priority, finish_reason=comp.finish_reason,
                 n_tokens=len(comp.tokens), ttft_s=comp.ttft_s,
-                queue_wait_s=comp.queue_wait_s, itl_s=itl))
+                queue_wait_s=comp.queue_wait_s, itl_s=itl,
+                n_prompt_tokens=len(r.prompt)))
             self._finished()
             st.handle._push(("end", comp))
 

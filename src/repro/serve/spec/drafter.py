@@ -144,7 +144,9 @@ class DraftModelDrafter:
         self._chunk = max(2, min(chunk, s_max))
         n_blocks = max(1, n_seqs) * (s_max // stride)
         self.paged = PagedKV(n_blocks=n_blocks, block_pos_stride=stride)
-        self.pool = BlockPool(n_blocks, stride)
+        # pure allocator: the draft side never publishes prefixes, so it
+        # opts out of the radix cache entirely
+        self.pool = BlockPool(n_blocks, stride, prefix_cache=False)
         body, in_specs, out_specs, pspecs_specs, pctx = \
             make_prefill_chunk_body(cfg, mesh, plan, batch=1, s_max=s_max,
                                     chunk=self._chunk, paged=self.paged,

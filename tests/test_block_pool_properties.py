@@ -1,14 +1,18 @@
-"""Property-based tests (hypothesis) for BlockPool invariants.
+"""Property-based tests (hypothesis) for BlockPool + radix-cache invariants.
 
 The pool's ids are physical arena indices since the paged refactor, so its
 bookkeeping invariants ARE the device memory-safety argument:
 
-  * refcounts never go negative; every free block has refcount 0;
-  * free-list ∪ used = all blocks, with no duplicates;
+  * refcounts never go negative; a refcount-0 page is EITHER on the free
+    list OR held (revivable) by exactly one generation-valid evictable
+    radix node — never both, never neither;
+  * the tree's page->node claim index is a bijection over reachable nodes,
+    every registered claim is generation-valid, and ``live_blockers`` is
+    exactly the number of live-claim strict descendants;
   * fork/release round-trips return every page;
-  * the prefix map never resolves to a free block (a hit on a freed page
-    revives it — refcount > 0 — before the id is handed out; a hit on a
-    recycled page is rejected by its generation counter).
+  * eviction is leaf-first LRU and never touches a node with children or a
+    live page; a cached prefix resolves IFF its page still carries the
+    publish-time generation (stale prefixes die at reallocation).
 """
 
 import pytest
@@ -23,14 +27,60 @@ from repro.serve.resilience import FaultInjector  # noqa: E402
 S = settings(deadline=None, max_examples=60)
 
 
+def _check_tree(pool: BlockPool):
+    """Structural invariants of the radix prefix cache."""
+    cache = pool.cache
+    reachable = []
+    stack = [cache.root]
+    while stack:
+        nd = stack.pop()
+        for blk, ch in nd.children.items():
+            assert ch.parent is nd and ch.block == blk
+            assert len(blk) == pool.block_pos_stride
+            assert not ch.detached, "detached node still reachable"
+            reachable.append(ch)
+            stack.append(ch)
+    # one claim per node, one node per claim, every claim generation-valid
+    assert len(reachable) == cache.n_nodes <= pool.n_blocks
+    for nd in reachable:
+        assert cache._claims.get(nd.page) is nd, \
+            f"claim index disagrees for page {nd.page}"
+        assert nd.gen == pool._gen[nd.page], "stale claim survived"
+        assert (nd in cache._evictable) == (pool._refs[nd.page] == 0), \
+            "evictable set disagrees with refcount"
+    node_set = set(map(id, reachable))
+    for page, nd in cache._claims.items():
+        assert nd.page == page and id(nd) in node_set
+
+    def live_desc(nd):
+        cnt = 0
+        for ch in nd.children.values():
+            cnt += int(pool._refs[ch.page] > 0) + live_desc(ch)
+        return cnt
+
+    for nd in reachable:
+        assert nd.live_blockers == live_desc(nd), \
+            "incremental live_blockers drifted from recount"
+
+
 def _check_invariants(pool: BlockPool):
     free = set(pool._free)
     assert len(free) == len(pool._free), "free list holds duplicates"
     assert pool.n_free + pool.n_used == pool.n_blocks
+    evictable_pages = set()
+    if pool.cache is not None:
+        _check_tree(pool)
+        evictable_pages = {n.page for n in pool.cache._evictable}
     for bid in range(pool.n_blocks):
         assert pool._refs[bid] >= 0, f"negative refcount on {bid}"
-        assert (bid in free) == (pool._refs[bid] == 0), \
-            f"block {bid}: free-list membership disagrees with refcount"
+        if pool._refs[bid] == 0:
+            # exactly one owner for a free page: the free list XOR the tree
+            assert (bid in free) != (bid in evictable_pages), \
+                f"free block {bid} owned by {'both' if bid in free else 'no'}" \
+                f" free list and cache"
+        else:
+            assert bid not in free and bid not in evictable_pages, \
+                f"live block {bid} available for reallocation"
 
 
 @S
@@ -57,11 +107,19 @@ def test_pool_invariants_under_random_op_sequences(data):
             bid = held[data.draw(st.integers(0, len(held) - 1))]
             held.append(pool.retain(bid))
         elif op == "publish" and held:
+            # keys are whole stride-sized blocks; extending an existing key
+            # grows a chain (a publish under a missing ancestor is a no-op)
             bid = held[data.draw(st.integers(0, len(held) - 1))]
-            key = tuple(data.draw(st.lists(st.integers(0, 3), min_size=1,
-                                           max_size=3)))
+            base = ()
+            if published and data.draw(st.booleans(), label="extend"):
+                base = published[data.draw(st.integers(0, len(published) - 1),
+                                           label="base")]
+            block = tuple(data.draw(st.integers(0, 1), label="tok")
+                          for _ in range(stride))
+            key = base + block
             pool.publish_prefix(key, bid)
-            published.append(key)
+            if key not in published:
+                published.append(key)
         elif op == "lookup" and published:
             key = published[data.draw(st.integers(0, len(published) - 1))]
             peek = pool.peek_prefix(key)     # pure read, must agree
@@ -74,7 +132,8 @@ def test_pool_invariants_under_random_op_sequences(data):
                 assert bid not in pool._free
                 held.append(bid)
         _check_invariants(pool)
-    # teardown: releasing every held reference returns every page
+    # teardown: releasing every held reference leaves every page obtainable
+    # (on the free list or cached-evictable, never leaked)
     for bid in held:
         pool.release(bid)
     _check_invariants(pool)
@@ -111,12 +170,16 @@ def test_rewind_generations_monotone_and_stale_prefixes_dead(data):
     never decrease (each reallocation strictly bumps), and a published
     prefix resolves IFF its page still carries the publish-time generation
     — a rewound page's stale prefix can never come back after the page is
-    recycled, even by a different sequence."""
+    recycled, even by a different sequence.
+
+    Publishes mirror the engine: ascending whole-prefix keys of one fixed
+    pseudo-prompt, so ancestors are present when a page is cached."""
     n = data.draw(st.integers(2, 10), label="n_blocks")
     stride = data.draw(st.integers(1, 4), label="stride")
     pool = BlockPool(n, stride)
     seq = SequenceBlocks(pool)
     other = SequenceBlocks(pool)    # the competing allocator
+    ptoks = [(k * 7 + 3) % 11 for k in range(n * stride)]
     gens = list(pool._gen)
     n_tokens = 0                    # seq's committed position count
     published = {}                  # key -> (bid, publish-time generation)
@@ -139,9 +202,10 @@ def test_rewind_generations_monotone_and_stale_prefixes_dead(data):
             n_tokens = cut
         elif op == "publish" and seq.ids:
             i = data.draw(st.integers(0, len(seq.ids) - 1), label="page")
-            bid = seq.ids[i]
-            pool.publish_prefix((i,), bid)
-            published[(i,)] = (bid, pool._gen[bid])
+            for j in range(i + 1):      # ascending, like the engine
+                key = tuple(ptoks[:(j + 1) * stride])
+                pool.publish_prefix(key, seq.ids[j])
+                published[key] = (seq.ids[j], pool._gen[seq.ids[j]])
         elif op == "steal":
             # force reallocation pressure on rewound pages
             try:
@@ -155,7 +219,8 @@ def test_rewind_generations_monotone_and_stale_prefixes_dead(data):
             got = pool.lookup_prefix(key)
             if pool._gen[bid] == gen:
                 # page never recycled since publish: must resolve (even if
-                # currently free — the hit revives it with a reference)
+                # currently free — the hit revives it with a reference).
+                # Leaf-first eviction guarantees the ancestors outlived it.
                 assert got == bid and pool.refcount(bid) > 0
                 pool.release(got)   # drop the reference the hit handed us
             else:
@@ -166,6 +231,86 @@ def test_rewind_generations_monotone_and_stale_prefixes_dead(data):
         _check_invariants(pool)
     seq.release_all()
     other.release_all()
+    _check_invariants(pool)
+    assert pool.n_free == pool.n_blocks
+
+
+@S
+@given(st.data())
+def test_radix_tree_interleavings(data):
+    """Tree-level contract under admission-shaped interleavings: two prompt
+    families share a first block, requests match/adopt/fill/rewind/release
+    against the same tree, and eviction pressure recycles cached pages.
+
+      * matched pages are always generation-live;
+      * ``evict_one`` picks exactly the LRU childless evictable node, never
+        a node with children or a live page;
+      * every structural invariant (claims bijection, evictable/refcount
+        agreement, live_blockers recount, free-XOR-cached ownership) holds
+        after every op;
+      * tree size stays bounded by pool size;
+      * nothing leaks: after releasing everything, every page is obtainable.
+    """
+    n = data.draw(st.integers(2, 10), label="n_blocks")
+    stride = data.draw(st.integers(1, 3), label="stride")
+    pool = BlockPool(n, stride)
+    base = [data.draw(st.integers(0, 1), label="tok")
+            for _ in range(n * stride)]
+    alt = list(base[:stride]) + [1 - t for t in base[stride:]]
+    prompts = [base, alt]               # shared first block, distinct tails
+    seqs = []                           # [SequenceBlocks, prompt, n_filled]
+    for _ in range(data.draw(st.integers(0, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "fill", "rewind", "release", "evict"]), label="op")
+        if op == "admit":
+            prompt = prompts[data.draw(st.integers(0, 1), label="which")]
+            n_match, flags = pool.match_prefix(prompt)
+            nodes = pool.cache.match(prompt, (len(prompt) - 1) // stride)
+            assert len(nodes) == n_match == len(flags)
+            for nd in nodes:            # matched pages are generation-live
+                assert pool._gen[nd.page] == nd.gen
+            take = data.draw(st.integers(0, n_match), label="take")
+            seq = SequenceBlocks(pool)
+            seq.adopt(pool.adopt_prefix(prompt, take))
+            for bid in seq.ids:
+                assert pool.refcount(bid) > 0
+            seqs.append([seq, prompt, take])
+        elif op == "fill" and seqs:
+            entry = seqs[data.draw(st.integers(0, len(seqs) - 1),
+                                   label="seq")]
+            seq, prompt, filled = entry
+            if filled >= n:
+                continue
+            try:
+                seq.ensure((filled + 1) * stride)
+            except PoolExhausted:
+                continue
+            end = (filled + 1) * stride
+            if end <= len(prompt):      # prompt-covering pages get cached
+                pool.publish_prefix(tuple(prompt[:end]), seq.ids[filled])
+            entry[2] += 1
+        elif op == "rewind" and seqs:
+            entry = seqs[data.draw(st.integers(0, len(seqs) - 1),
+                                   label="seq")]
+            keep = data.draw(st.integers(0, len(entry[0].ids)), label="keep")
+            entry[0].rewind(keep * stride)
+            entry[2] = min(entry[2], keep)
+        elif op == "release" and seqs:
+            entry = seqs.pop(data.draw(st.integers(0, len(seqs) - 1),
+                                       label="seq"))
+            entry[0].release_all()
+        elif op == "evict":
+            leaves = [nd for nd in pool.cache._evictable if not nd.children]
+            expect = (min(leaves, key=lambda nd: nd.last_access).page
+                      if leaves else None)
+            got = pool.cache.evict_one()
+            assert got == expect        # LRU leaf, or nothing evictable
+            if got is not None:
+                assert pool._refs[got] == 0
+                pool._free.appendleft(got)   # hand back, as alloc would
+        _check_invariants(pool)
+    for entry in seqs:
+        entry[0].release_all()
     _check_invariants(pool)
     assert pool.n_free == pool.n_blocks
 

@@ -1,0 +1,242 @@
+"""Radix prefix cache: unit tests for the tree + engine-level reuse parity.
+
+The load-bearing assertion extends the repo's parity invariant to
+cross-request KV reuse: an engine serving with the radix prefix cache ON
+must emit token-for-token the greedy output of an engine with the cache
+OFF — cold (first sight of a prompt) AND warm (prefix pages adopted from
+an earlier request) — for both pure-attention and hybrid (paged KV +
+dense SSM snapshot) models, while doing strictly less prefill work warm.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import (BlockPool, EngineConfig, SamplingParams,
+                                build_engine, generate)
+from repro.serve.engine.block_cache import PoolExhausted, SequenceBlocks
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32,
+           attn_block_kv=32)
+ATTN = ModelConfig(name="att", family="dense", d_model=64, n_layers=2,
+                   n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128, **F32)
+HYBRID = ModelConfig(
+    name="hyb", family="hybrid", d_model=64, n_layers=2, n_heads=8,
+    n_kv_heads=4, d_ff=128, vocab_size=128, d_inner=128, ssm_heads=8,
+    ssm_headdim=16, ssm_state=16, ssm_groups=4,
+    layer_pattern=(("attn", "mlp"), ("mamba", "mlp")), sub_quadratic=True,
+    **F32)
+S_MAX = 32
+
+
+# -- tree unit tests (no mesh) ----------------------------------------------
+
+
+def _publish_prompt(pool, seq, prompt):
+    """Fill and cache every prompt-covering page, like the engine does."""
+    stride = pool.block_pos_stride
+    seq.ensure(len(prompt))
+    for i in range(len(prompt) // stride):
+        pool.publish_prefix(tuple(prompt[:(i + 1) * stride]), seq.ids[i])
+
+
+def test_radix_shared_prefix_match_and_adopt():
+    """Any shared token-block prefix dedupes: a second prompt sharing two
+    blocks adopts the SAME physical pages with bumped refcounts."""
+    pool = BlockPool(8, 4)
+    a = list(range(12)) + [99, 98]          # 3 full blocks + partial
+    seq = SequenceBlocks(pool)
+    _publish_prompt(pool, seq, a)
+    b = a[:8] + [50, 51, 52, 53, 54]        # shares exactly 2 blocks
+    n, revive = pool.match_prefix(b)
+    assert n == 2 and revive == [False, False]
+    ids = pool.adopt_prefix(b, n)
+    assert ids == seq.ids[:2]               # same physical pages
+    assert all(pool.refcount(bid) == 2 for bid in ids)
+    assert pool.n_prefix_hits == 2
+    assert pool.n_prefix_tokens_reused == 8
+    # a prompt diverging inside block 1 shares nothing
+    assert pool.match_prefix([7] + a[1:])[0] == 0
+    for bid in ids:
+        pool.release(bid)
+    seq.release_all()
+    assert pool.n_free == pool.n_blocks
+
+
+def test_freed_prefix_revives_then_lru_leaf_first_eviction():
+    """A freed cached page stays revivable off the free list; when the free
+    list runs dry, eviction takes cold leaves before hot interior nodes."""
+    pool = BlockPool(4, 2)
+    prompt = [1, 2, 3, 4, 5, 6]             # 3 blocks: chain a -> b -> c
+    seq = SequenceBlocks(pool)
+    _publish_prompt(pool, seq, prompt)
+    chain = list(seq.ids)
+    seq.release_all()
+    assert len(pool._free) == 1             # 3 cached pages held by the tree
+    assert pool.n_free == 4                 # ... but all still reclaimable
+    n, revive = pool.match_prefix(prompt + [7])
+    assert n == 3 and revive == [True, True, True]
+    # keep the root block hot, then starve the pool: the uncached free page
+    # goes first, then the LRU leaves tail-inward (c before b), and the
+    # still-referenced root block is never evicted
+    root_page = pool.adopt_prefix(prompt, 1)[0]
+    assert root_page == chain[0] and pool.refcount(root_page) == 1
+    got = [pool.alloc() for _ in range(3)]
+    assert got[1:] == [chain[2], chain[1]]  # leaf-first, deepest coldest
+    assert pool.n_free == 0
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    # the surviving root block still resolves; the evicted tail is dead
+    assert pool.match_prefix(prompt + [7])[0] == 1
+    for bid in got + [root_page]:
+        pool.release(bid)
+    assert pool.n_free == pool.n_blocks
+
+
+def test_cache_memory_is_o_distinct_blocks():
+    """Satellite regression: the flat tuple-keyed prefix dict is GONE, and
+    retained key bytes scale with distinct token blocks (tree nodes), not
+    with the number or length of prompts served."""
+    pool = BlockPool(32, 4)
+    assert not hasattr(pool, "_prefix")     # the O(P^2) map is deleted
+    assert not hasattr(pool, "_published")
+    sys_prefix = list(range(16))            # 4 shared blocks
+    seqs = []
+    for i in range(8):                      # 8 prompts, distinct tails
+        prompt = sys_prefix + [100 + i, 101 + i, 102 + i, 103 + i]
+        n, _ = pool.match_prefix(prompt)
+        seq = SequenceBlocks(pool)
+        seq.adopt(pool.adopt_prefix(prompt, n))
+        _publish_prompt(pool, seq, prompt)
+        seqs.append(seq)
+    # 4 shared nodes + one distinct tail node per prompt — NOT 8 * 5 keys,
+    # and each node stores one block, not its whole root path
+    assert pool.cache.n_nodes == 4 + 8
+    assert pool.cache.key_tokens() == (4 + 8) * 4
+    assert pool.cache.n_nodes <= pool.n_blocks
+    assert pool.n_used == 4 + 8             # shared pages counted once
+    for seq in seqs:
+        seq.release_all()
+    assert pool.n_free == pool.n_blocks
+
+
+def test_fork_after_prefix_hit_round_trips():
+    """Adopted prefix pages survive forking: refcounts stack per table and
+    every release path drains back to a whole pool."""
+    pool = BlockPool(8, 4)
+    prompt = list(range(8)) + [9]
+    seq = SequenceBlocks(pool)
+    _publish_prompt(pool, seq, prompt)
+    adopter = SequenceBlocks(pool)
+    adopter.adopt(pool.adopt_prefix(prompt, 2))
+    child = adopter.fork()
+    assert child.ids == adopter.ids == seq.ids[:2]
+    assert all(pool.refcount(bid) == 3 for bid in child.ids)
+    seq.release_all()
+    adopter.release_all()
+    # the fork still holds the pages — and so does the cache afterwards
+    assert all(pool.refcount(bid) == 1 for bid in child.ids)
+    child.release_all()
+    assert pool.n_free == pool.n_blocks
+    assert pool.match_prefix(prompt)[0] == 2    # still cached, revivable
+
+
+def test_prefix_cache_off_is_pure_free_list():
+    """The parity baseline: prefix_cache=False serves pure free-list
+    allocation — no tree, no matches, publish is a no-op."""
+    pool = BlockPool(4, 2, prefix_cache=False)
+    assert pool.cache is None
+    bid = pool.alloc()
+    pool.publish_prefix((1, 2), bid)
+    assert pool.match_prefix([1, 2, 3, 4]) == (0, [])
+    assert pool.adopt_prefix([1, 2, 3, 4], 0) == []
+    assert pool.peek_prefix((1, 2)) is None
+    assert pool.lookup_prefix((1, 2)) is None
+    pool.release(bid)
+    assert len(pool._free) == pool.n_free == pool.n_blocks
+    assert pool.n_prefix_hits == 0
+
+
+# -- engine-level reuse parity (mesh) ---------------------------------------
+
+
+def _shared_prefix_prompts(cfg, n, sys_tokens=12, tail=3):
+    rng = np.random.default_rng(3)
+    sys_prefix = rng.integers(0, cfg.vocab_size, size=sys_tokens).tolist()
+    return [sys_prefix + rng.integers(0, cfg.vocab_size, size=tail).tolist()
+            for _ in range(n)]
+
+
+def _engine(cfg, mesh, plan, **kw):
+    kw.setdefault("buckets", (1, 2, 4))
+    ec = EngineConfig(s_max=S_MAX, block_pos_stride=4, prefill_chunks=(4,),
+                      **kw)
+    return build_engine(cfg, mesh, plan, engine_cfg=ec, seed=0)
+
+
+@pytest.mark.parametrize("cfg", [ATTN, HYBRID], ids=["attn", "hybrid"])
+def test_warm_prefix_parity_cold_and_warm(cfg, mesh16, plan16, request):
+    """The acceptance criterion: token-for-token greedy parity cache-on vs
+    cache-off, cold AND warm — for paged-KV-only and hybrid (dense SSM
+    snapshots resume through tree nodes) models — with strictly fewer
+    prefill launches and fewer prompt tokens ingested on the warm pass."""
+    prompts = _shared_prefix_prompts(cfg, 4)
+    sp = SamplingParams(max_tokens=6)
+
+    eng_off = _engine(cfg, mesh16, plan16, prefix_cache=False)
+    base_cold = generate(eng_off, prompts, sp)
+    off_cold = (eng_off.stats.prefill_launches,
+                eng_off.stats.prompt_tokens_ingested)
+    base_warm = generate(eng_off, prompts, sp)
+
+    eng_on = _engine(cfg, mesh16, plan16, prefix_cache=True)
+    on_cold = generate(eng_on, prompts, sp)
+    st1 = (eng_on.stats.prefill_launches,
+           eng_on.stats.prompt_tokens_ingested)
+    hits_cold = eng_on.stats.prefix_hits
+    on_warm = generate(eng_on, prompts, sp)
+    st2 = (eng_on.stats.prefill_launches,
+           eng_on.stats.prompt_tokens_ingested)
+
+    assert [c.tokens for c in on_cold] == [c.tokens for c in base_cold]
+    assert [c.tokens for c in on_warm] == [c.tokens for c in base_warm]
+    assert [c.tokens for c in base_warm] == [c.tokens for c in base_cold]
+    # the warm pass adopted the cold pass's pages: every request's shared
+    # 12-token prefix (3 pages) is a hit, and prefill shrinks accordingly
+    assert eng_on.stats.prefix_hits >= hits_cold + 3 * len(prompts)
+    assert eng_on.stats.prefix_tokens_reused > 0
+    assert st2[0] - st1[0] < off_cold[0], "warm pass must launch less"
+    assert st2[1] - st1[1] < off_cold[1], "warm pass must ingest less"
+    assert 0.0 < eng_on.stats.prefix_hit_rate < 1.0
+    # drained: every page is obtainable again (free list or evictable)
+    assert eng_on.pool.n_free == eng_on.pool.n_blocks
+    if eng_on.store.slot_pool is not None:
+        assert eng_on.store.slot_pool.n_used == 0
+
+
+def test_speculative_rollback_then_rehit(mesh16, plan16):
+    """Speculation's rewinds release only unpublished tail pages, so a
+    rolled-back sequence's prompt prefix stays cached: a second round of
+    the same prompts still hits, and parity holds throughout."""
+    from repro.serve.spec import SpeculationConfig
+    rng = np.random.default_rng(5)
+    sys_prefix = ([7, 11, 13, 7, 11, 13, 7, 11] * 2)[:12]  # draftable
+    prompts = [sys_prefix + rng.integers(0, ATTN.vocab_size, size=3).tolist()
+               for _ in range(3)]
+    sp = SamplingParams(max_tokens=8)
+
+    eng_off = _engine(ATTN, mesh16, plan16, prefix_cache=False)
+    base = generate(eng_off, prompts, sp) + generate(eng_off, prompts, sp)
+
+    spec = SpeculationConfig(drafter="ngram", k=3)
+    eng = _engine(ATTN, mesh16, plan16, prefix_cache=True, speculation=spec)
+    outs = generate(eng, prompts, sp)
+    hits_cold = eng.stats.prefix_hits
+    outs += generate(eng, prompts, sp)
+
+    assert [c.tokens for c in outs] == [c.tokens for c in base]
+    assert eng.stats.spec_launches > 0
+    assert eng.stats.prefix_hits > hits_cold, "re-hit after rollback"
+    assert eng.pool.n_free == eng.pool.n_blocks
