@@ -299,6 +299,138 @@ def run_speculation(report, *, requests=8, rate=16.0, seed=0, config=None,
            "streamed tokens identical with speculation off/ngram")
 
 
+def run_failover(report, *, requests=12, kills=2, seed=0, config=None,
+                 json_path="auto", timestamp=None, smoke=False):
+    """Supervised-replica failover under SIGKILL: the serving stack's
+    crash-recovery record.
+
+    One :class:`ReplicaSupervisor` drives the workload while the bench
+    hard-kills the worker process ``kills`` times mid-generation (at
+    evenly spaced delivered-token thresholds).  The gate is the failover
+    contract: every stream's tokens equal the uninterrupted reference
+    token for token — ``tokens_lost == 0`` AND ``tokens_duplicated == 0``
+    — with a 100% completion rate; the record adds the measured recovery
+    time (crash detected -> fresh process restored) per failover."""
+    import tempfile
+
+    from repro.serve.supervisor import EngineSpec, ReplicaSupervisor, \
+        SupervisorConfig
+    if json_path == "auto":
+        json_path = None if smoke else JSON_PATH
+    cfg = _bench_config(config)
+    plan = MeshPlan((DATA, MODEL), (1, 16), 4, 4)
+    ec = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4, 8), block_pos_stride=8)
+    spec = EngineSpec(model_cfg=cfg, plan=plan, engine_cfg=ec, seed=0)
+
+    rng = np.random.default_rng(seed)
+    prompts, n_toks = _workload(rng, cfg.vocab_size, requests)
+    sampling = [SamplingParams(max_tokens=n) for n in n_toks]
+    expect = generate(spec.build(), prompts, sampling)
+    total_expected = sum(len(e.tokens) for e in expect)
+    thresholds = [total_expected * (i + 1) // (kills + 1)
+                  for i in range(kills)]
+
+    sup_cfg = SupervisorConfig(
+        checkpoint_path=os.path.join(tempfile.mkdtemp(prefix="failover-"),
+                                     "replica.ckpt"),
+        checkpoint_every_steps=4, fsync=True, max_pending=requests,
+        max_respawns=kills + 2)
+
+    async def drive():
+        async with ReplicaSupervisor(spec, sup_cfg) as sup:
+            streams = [await sup.submit(p, max_tokens=n)
+                       for p, n in zip(prompts, n_toks)]
+            streamed = {s.request_id: [] for s in streams}
+            comps = {}
+
+            async def consume(s):
+                async for tok in s:
+                    streamed[s.request_id].append(tok)
+                comps[s.request_id] = s.completion
+
+            tasks = [asyncio.create_task(consume(s)) for s in streams]
+
+            async def killer():
+                for i, threshold in enumerate(thresholds):
+                    while sum(len(v) for v in streamed.values()) < threshold:
+                        await asyncio.sleep(0.01)
+                    await sup.kill_replica()
+                    while sup.n_spawns < i + 2:
+                        await asyncio.sleep(0.05)
+
+            await asyncio.gather(killer(), *tasks)
+            snap = sup.metrics.snapshot()
+            return ([streamed[s.request_id] for s in streams],
+                    [comps[s.request_id] for s in streams],
+                    snap, sup.n_failovers)
+
+    streamed, comps, snap, n_failovers = asyncio.run(drive())
+
+    lost = dup = 0
+    completed = 0
+    for got, comp, e in zip(streamed, comps, expect):
+        ok = 0
+        for a, b in zip(got, e.tokens):
+            if a != b:
+                break
+            ok += 1
+        lost += len(e.tokens) - ok
+        dup += len(got) - ok
+        if comp is not None and comp.finish_reason in ("stop", "length"):
+            completed += 1
+    rate_done = completed / requests
+    rec = snap["failover"]["recovery_s"]
+
+    report("service.failover.kills", n_failovers,
+           f"{kills} requested at delivered-token thresholds {thresholds}")
+    report("service.failover.tokens_lost", lost,
+           f"of {total_expected} expected (dup {dup}) — gate: 0/0")
+    report("service.failover.completion_rate", f"{rate_done:.3f}",
+           f"{completed}/{requests} finished stop/length")
+    if rec["n"]:
+        report("service.failover.recovery_s_mean", f"{rec['mean']:.3f}",
+               f"max {rec['max']:.3f} over {rec['n']} failovers "
+               "(detect -> respawn + restore + re-queue)")
+    report("service.failover.checkpoints", snap["failover"]["checkpoints"],
+           f"cadence {sup_cfg.checkpoint_every_steps} steps, fsync on")
+
+    if json_path:
+        ts = timestamp or datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds")
+        n = _append_trajectory(json_path, {
+            "bench": "serve_service",
+            "mode": "failover",
+            "config": cfg.name,
+            "requests": requests,
+            "kills": n_failovers,
+            "seed": seed,
+            "timestamp": ts,
+            "completed": completed,
+            "completion_rate": round(rate_done, 4),
+            "tokens_expected": total_expected,
+            "tokens_lost": lost,
+            "tokens_duplicated": dup,
+            "checkpoints": snap["failover"]["checkpoints"],
+            "recovery_s": {s: (round(v, 5) if isinstance(v, float) else v)
+                           for s, v in rec.items()},
+        })
+        report("service.failover.json", os.path.relpath(json_path),
+               f"trajectory appended ({n} records)")
+
+    if n_failovers < kills:
+        raise RuntimeError(
+            f"only {n_failovers} of {kills} kills landed")
+    if lost or dup:
+        raise RuntimeError(
+            f"failover broke the token contract: {lost} lost, "
+            f"{dup} duplicated")
+    if completed != requests:
+        raise RuntimeError(
+            f"only {completed}/{requests} requests completed")
+    report("service.failover.contract", "ok",
+           "zero lost, zero duplicated, all streams completed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rate", type=float, default=None,
@@ -324,6 +456,15 @@ def main():
                     help="append records to this path (default: "
                          "BENCH_serve.json on full sweeps; single-rate "
                          "runs don't touch the trajectory)")
+    ap.add_argument("--failover", action="store_true",
+                    help="run the supervised-replica SIGKILL pass instead "
+                         "of the admission sweep: kill the worker process "
+                         "--kills times mid-generation, gate on zero "
+                         "lost/duplicated tokens and 100%% completion "
+                         "(--rate or --requests<=8 makes it a "
+                         "trajectory-free smoke)")
+    ap.add_argument("--kills", type=int, default=2,
+                    help="worker kills in the --failover pass")
     ap.add_argument("--speculation", action="store_true",
                     help="run the paired off/ngram open-loop pass instead "
                          "of the admission sweep: same repetitive workload "
@@ -336,6 +477,13 @@ def main():
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
+    if args.failover:
+        run_failover(
+            report, kills=args.kills, seed=args.seed, config=args.config,
+            json_path=args.json or "auto", timestamp=args.timestamp,
+            requests=args.requests if args.requests != 64 else 12,
+            smoke=args.rate is not None or args.requests not in (64, 12))
+        return
     if args.speculation:
         run_speculation(
             report, rate=args.rate or 16.0, seed=args.seed,

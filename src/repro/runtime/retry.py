@@ -24,17 +24,22 @@ T = TypeVar("T")
 
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
-    """Bounded-attempt retry with linear backoff.
+    """Bounded-attempt retry with linear or exponential backoff.
 
-    ``max_retries`` counts RE-tries: 0 means one attempt total.  Sleeps
-    ``backoff_s * attempt`` between attempts (attempt 1, 2, ...), the same
-    linear ramp the training controller has always used; 0.0 disables
-    sleeping entirely (the serving engine's default — a drive-loop retry
-    must not stall batch-mates).
+    ``max_retries`` counts RE-tries: 0 means one attempt total.  With the
+    default ``growth=0.0`` the delay before attempt n (1, 2, ...) is the
+    linear ramp ``backoff_s * n`` the training controller has always used;
+    ``growth > 1.0`` switches to an exponential ramp
+    ``backoff_s * growth**(n-1)`` capped at ``max_backoff_s`` — the
+    replica supervisor's crash-loop containment schedule.  ``backoff_s ==
+    0.0`` disables sleeping entirely (the serving engine's default — a
+    drive-loop retry must not stall batch-mates).
     """
 
     max_retries: int = 3
     backoff_s: float = 0.01
+    growth: float = 0.0             # 0.0 = linear ramp; >1.0 = exponential
+    max_backoff_s: Optional[float] = None   # cap (exponential ramps only)
 
     def __post_init__(self):
         if self.max_retries < 0:
@@ -42,6 +47,22 @@ class RetryPolicy:
                 f"max_retries must be >= 0, got {self.max_retries}")
         if self.backoff_s < 0:
             raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+        if self.growth != 0.0 and self.growth < 1.0:
+            raise ValueError(
+                f"growth must be 0.0 (linear) or >= 1.0, got {self.growth}")
+        if self.max_backoff_s is not None and self.max_backoff_s < 0:
+            raise ValueError(
+                f"max_backoff_s must be >= 0, got {self.max_backoff_s}")
+
+    def delay_s(self, attempt: int) -> float:
+        """Backoff before re-try ``attempt`` (1-based)."""
+        if attempt < 1 or not self.backoff_s:
+            return 0.0
+        if self.growth:
+            d = self.backoff_s * self.growth ** (attempt - 1)
+            return d if self.max_backoff_s is None \
+                else min(d, self.max_backoff_s)
+        return self.backoff_s * attempt
 
 
 def retry_with_backoff(
@@ -66,5 +87,6 @@ def retry_with_backoff(
                 raise
             if on_retry is not None:
                 on_retry(attempt, e)
-            if policy.backoff_s:
-                sleep(policy.backoff_s * attempt)
+            d = policy.delay_s(attempt)
+            if d:
+                sleep(d)

@@ -422,11 +422,17 @@ class ServingEngine:
             self._note_migration(sd)
             chunk = self._chunk_len(sd.max_remaining)
             # speculative decoding replaces the pure-decode launch when any
-            # slot yields a usable draft; on False (no drafts this round) the
-            # plain serve_step launch below runs unchanged.  The spec path is
-            # NOT guarded: chaos runs disable speculation (docs/serving.md).
-            if chunk is None and self.spec is not None and self.spec.step(sd):
-                return True
+            # slot yields a usable draft; with no drafts this round the
+            # plain serve_step launch below runs unchanged.  With a guard
+            # armed the verify launch runs under the same retry/rollback/
+            # quarantine discipline as every other step.
+            if chunk is None and self.spec is not None:
+                if self.guard is not None:
+                    handled = self.guard.spec_step(sd)
+                    if handled is not None:
+                        return True
+                elif self.spec.step(sd):
+                    return True
             if self.guard is not None:
                 return self.guard.step(sd, chunk)
             rows, fed = self._launch(sd, chunk)
@@ -641,14 +647,33 @@ class ServingEngine:
         record to ``path`` (atomic JSON), then finish them all as
         ``"drained"`` — pages and dense slots return to their pools, and a
         fresh engine can :meth:`restore_from` the file to continue each
-        generation token-for-token.  Returns the number checkpointed."""
+        generation token-for-token.  Returns the number checkpointed.
+
+        A speculative round still in flight (its verify launch faulted or
+        was interrupted before commit) is rolled back FIRST, so the
+        checkpoint can only ever capture committed state — never a
+        pre-verify draft tail."""
         from repro.serve.resilience.checkpoint import checkpoint_requests
+        if self.spec is not None:
+            self.spec.rollback_in_flight()
         n = checkpoint_requests(self, path)
         for r in self.scheduler.drain_all("drained"):
             self._rngs.pop(r.request_id, None)
             if self.spec is not None:
                 self.spec.release(r.request_id)
         return n
+
+    def checkpoint_to(self, path: str, *, fsync: bool = True) -> int:
+        """Periodic (non-draining) checkpoint: durably write every live
+        request's resume record WITHOUT finishing anything — the replica
+        supervisor's incremental handoff file, taken between steps while
+        generation keeps running.  Any in-flight speculative round is
+        rolled back first (a no-op between committed rounds), same rule as
+        :meth:`drain_to`.  Returns the number checkpointed."""
+        from repro.serve.resilience.checkpoint import checkpoint_requests
+        if self.spec is not None:
+            self.spec.rollback_in_flight()
+        return checkpoint_requests(self, path, fsync=fsync)
 
     def restore_from(self, path: str) -> list:
         """Resubmit a drain checkpoint's requests into this engine (rng

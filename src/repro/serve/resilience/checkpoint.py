@@ -14,9 +14,10 @@ sampling the remaining tokens are therefore identical to what the
 original engine would have produced; with temperature sampling the saved
 rng state makes the continuation reproducible too.
 
-File format (version 1, plain JSON — inspectable and diffable)::
+File format (version 2, durability-hardened)::
 
-    {"version": 1,
+    {"version": 2, "crc": <crc32 of body>, "length": <body bytes>}\\n
+    {"version": 2,
      "requests": [{"request_id": "...", "prompt": [...],
                    "output_tokens": [...],
                    "sampling": {"max_tokens": ..., "temperature": ...,
@@ -25,6 +26,16 @@ File format (version 1, plain JSON — inspectable and diffable)::
                    "ttft_deadline_s": null, "n_preemptions": 0,
                    "rng_state": {...} | null},
                   ...]}
+
+Line one is an integrity header (version + CRC32 + byte length of the
+JSON body that follows); the body is the same inspectable JSON document
+version 1 was.  Writes are crash-safe end to end: tmp file + ``fsync`` +
+atomic ``os.replace``, with the previous checkpoint rotated to
+``path + ".prev"`` first — so at every instant the disk holds at least
+one complete, verifiable checkpoint.  :func:`load_checkpoint` verifies
+length + CRC and falls back to the previous-good file on a corrupt,
+truncated, or future-version current file; version-1 files (no header)
+stay readable.
 
 Requests are recorded running-first (oldest admission first), then the
 waiting queue in order, and restored in the same order — so re-admission
@@ -38,13 +49,15 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zlib
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve.engine.request import Request, SamplingParams
 
-CHECKPOINT_VERSION = 1
+CHECKPOINT_VERSION = 2
+PREV_SUFFIX = ".prev"           # previous-good rotation target
 
 
 def request_record(req: Request,
@@ -84,23 +97,109 @@ def thaw_request(rec: dict) -> Tuple[Request, Optional[dict]]:
     return req, rec.get("rng_state")
 
 
-def checkpoint_requests(engine, path: str) -> int:
-    """Atomically write every live request (running first, then waiting)
-    to ``path``; returns the number checkpointed.  Pure read — the caller
-    decides whether to also finish the requests (drain) or keep going."""
-    recs = [request_record(r, engine._rngs.get(r.request_id))
-            for r in (*engine.scheduler.running, *engine.scheduler.waiting)]
-    payload = {"version": CHECKPOINT_VERSION, "requests": recs}
+def write_checkpoint(payload: dict, path: str, *, fsync: bool = True) -> None:
+    """Durably write ``payload`` as a version-2 checkpoint at ``path``.
+
+    tmp + ``fsync`` + atomic rename, with the current file rotated to
+    ``path + ".prev"`` FIRST — so a crash at any instant leaves either the
+    new checkpoint, or the previous-good one under ``.prev``, and never a
+    torn file a restore could mistake for truth (the CRC header catches
+    torn writes that slip past the rename discipline, e.g. injected
+    ``checkpoint_corrupt`` faults)."""
+    body = json.dumps(payload).encode()
+    header = json.dumps({
+        "version": int(payload.get("version", CHECKPOINT_VERSION)),
+        "crc": zlib.crc32(body) & 0xFFFFFFFF,
+        "length": len(body),
+    }).encode()
     d = os.path.dirname(os.path.abspath(path)) or "."
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
     try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, path)    # atomic: a crashed drain leaves no torn file
+        with os.fdopen(fd, "wb") as f:
+            f.write(header + b"\n" + body)
+            f.flush()
+            if fsync:
+                os.fsync(f.fileno())
+        if os.path.exists(path):
+            os.replace(path, path + PREV_SUFFIX)
+        os.replace(tmp, path)
     except BaseException:
-        os.unlink(tmp)
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
         raise
+
+
+def _parse_checkpoint(path: str) -> dict:
+    """Read + verify ONE checkpoint file (no fallback): length and CRC
+    must match the header, the version must be known.  Version-1 files
+    (one plain JSON document, no header line) parse unchanged."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    nl = raw.find(b"\n")
+    header = None
+    if nl != -1:
+        try:
+            header = json.loads(raw[:nl])
+        except ValueError:
+            header = None
+    if isinstance(header, dict) and "crc" in header:
+        body = raw[nl + 1:]
+        if len(body) != header.get("length"):
+            raise ValueError(
+                f"truncated drain checkpoint {path!r}: body is "
+                f"{len(body)} bytes, header promised {header.get('length')}")
+        if (zlib.crc32(body) & 0xFFFFFFFF) != header.get("crc"):
+            raise ValueError(
+                f"corrupt drain checkpoint {path!r}: body CRC mismatch")
+        version = header.get("version")
+        if version != CHECKPOINT_VERSION:
+            raise ValueError(
+                f"unsupported drain checkpoint version {version!r} "
+                f"(expected {CHECKPOINT_VERSION})")
+        return json.loads(body)
+    # no integrity header: a legacy version-1 file, or garbage
+    try:
+        payload = json.loads(raw)
+    except ValueError as e:
+        raise ValueError(f"corrupt drain checkpoint {path!r}: "
+                         f"not parseable ({e})") from e
+    version = payload.get("version") if isinstance(payload, dict) else None
+    if version != 1:
+        raise ValueError(f"unsupported drain checkpoint version {version!r} "
+                         f"(expected {CHECKPOINT_VERSION})")
+    return payload
+
+
+def load_checkpoint(path: str) -> dict:
+    """Load the last GOOD checkpoint at ``path``: the current file when it
+    verifies, else the ``.prev`` previous-good rotation; fails closed with
+    the current file's error when neither is readable."""
+    try:
+        return _parse_checkpoint(path)
+    except (OSError, ValueError) as primary:
+        prev = path + PREV_SUFFIX
+        if os.path.exists(prev):
+            try:
+                return _parse_checkpoint(prev)
+            except (OSError, ValueError) as fallback:
+                raise ValueError(
+                    f"no good drain checkpoint: {path!r} failed "
+                    f"({primary}) and previous-good {prev!r} failed "
+                    f"({fallback})") from primary
+        raise
+
+
+def checkpoint_requests(engine, path: str, *, fsync: bool = True) -> int:
+    """Durably write every live request (running first, then waiting)
+    to ``path``; returns the number checkpointed.  Pure read — the caller
+    decides whether to also finish the requests (drain) or keep going."""
+    recs = [request_record(r, engine._rngs.get(r.request_id))
+            for r in (*engine.scheduler.running, *engine.scheduler.waiting)]
+    write_checkpoint({"version": CHECKPOINT_VERSION, "requests": recs},
+                     path, fsync=fsync)
     return len(recs)
 
 
@@ -108,13 +207,9 @@ def restore_requests(engine, path: str) -> List[Request]:
     """Resubmit every checkpointed request into ``engine`` (same order the
     drain recorded), restoring sampling rng states; returns the requests.
     The engine replays prompt + prior outputs through chunked prefill and
-    continues generating from there."""
-    with open(path) as f:
-        payload = json.load(f)
-    version = payload.get("version")
-    if version != CHECKPOINT_VERSION:
-        raise ValueError(f"unsupported drain checkpoint version {version!r} "
-                         f"(expected {CHECKPOINT_VERSION})")
+    continues generating from there.  Falls back to the previous-good
+    rotation when the current file is corrupt/truncated/future-version."""
+    payload = load_checkpoint(path)
     out: List[Request] = []
     for rec in payload["requests"]:
         req, rng_state = thaw_request(rec)

@@ -25,6 +25,16 @@ is what lets the chaos soak assert token parity for surviving requests.
                paths under pressure.
 ``stall``      An artificial step stall (sleep) — what the service-layer
                watchdog exists to detect.
+``process_kill``
+               The replica worker process dies hard (``os._exit``, a
+               simulated SIGKILL) mid-drive-loop.  Consulted per step by
+               the supervisor's worker; the supervisor must detect the
+               death and fail over from the last good checkpoint.
+``checkpoint_corrupt``
+               The checkpoint just written lands corrupted on disk
+               (truncation / bit rot).  Consulted after each periodic
+               checkpoint write; the restore path must fall back to the
+               previous-good file.
 =============  =========================================================
 
 Every fired fault is recorded in :attr:`FaultInjector.events`;
@@ -38,7 +48,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-SITES = ("launch", "device", "nan_logits", "pool", "stall")
+SITES = ("launch", "device", "nan_logits", "pool", "stall",
+         "process_kill", "checkpoint_corrupt")
 
 
 class FaultInjected(RuntimeError):
@@ -144,6 +155,25 @@ class FaultInjector:
             self._record("stall", f"{self.stall_s}s")
             return self.stall_s
         return 0.0
+
+    def kill_process(self) -> bool:
+        """Should the replica worker die hard (``os._exit``) this step?
+        Queried by the supervisor's worker process; the record survives in
+        THAT process's injector only, so the caller reports the kill
+        through its event pipe before exiting."""
+        if self._roll("process_kill"):
+            self._record("process_kill")
+            return True
+        return False
+
+    def corrupt_checkpoint(self) -> bool:
+        """Should the checkpoint that was just written be corrupted on
+        disk?  The supervisor worker truncates the current file when this
+        fires, so a later restore exercises the previous-good fallback."""
+        if self._roll("checkpoint_corrupt"):
+            self._record("checkpoint_corrupt")
+            return True
+        return False
 
     def pool_steal(self, n_stealable: int) -> Tuple[int, int]:
         """(pages to steal, steps to hold them) — (0, 0) when the site

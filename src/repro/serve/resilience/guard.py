@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -200,6 +200,101 @@ class StepGuard:
 
         eng._commit(sd, rows, fed, skip=skip)
         return True
+
+    # -- the guarded speculative step ---------------------------------------
+
+    def spec_step(self, sd) -> Optional[bool]:
+        """Run one SPECULATIVE step (draft + verify launch + commit) under
+        the same retry/rollback/quarantine discipline as :meth:`step`.
+
+        Returns None when no slot yields a usable draft this round (the
+        caller falls back to the guarded plain launch), True otherwise —
+        including a retry-exhausted round that made no progress but rolled
+        its draft tail back cleanly: dense slots restored to their
+        pre-launch snapshots, draft-ensured pages freed, and the drafter's
+        fed record truncated to the committed sequence."""
+        eng, cfg = self.eng, self.cfg
+        stats = eng.stats
+        spec = eng.spec
+        inj = eng.engine_cfg.fault_injector
+        rnd = spec.prepare(sd)
+        if rnd is None:
+            return None
+
+        if inj is not None:
+            d = inj.stall()
+            if d:
+                stats.fault_stalls += 1
+                time.sleep(d)
+
+        def _rollback(attempt: int, e: BaseException) -> None:
+            stats.fault_launch_failures += 1
+            stats.fault_retries += 1
+            self._spec_restore(rnd, e)
+
+        try:
+            rows = retry_with_backoff(
+                lambda: spec.launch(rnd), policy=cfg.retry,
+                transient=(FaultInjected,), on_retry=_rollback)
+        except FaultInjected as e:
+            # retries exhausted: roll back the whole round (verify pages
+            # AND drafter state), charge every cohabiting request, and
+            # quarantine the repeat offenders — the batch-wide attribution
+            # rule of :meth:`step`
+            stats.fault_launch_failures += 1
+            self._spec_restore(rnd, e)
+            spec.rollback_in_flight()
+            for s, r in enumerate(sd.slots):
+                if r is None:
+                    continue
+                r.fault_failures += 1
+                if r.fault_failures > cfg.max_request_failures:
+                    self._quarantine(r)
+            return True
+
+        # clFinish BEFORE any restore (same donated-arena rule as step())
+        eng.queue.finish()
+
+        # non-finite verify rows are per-slot attributable: that slot
+        # commits nothing this round — its snapshot is restored and its
+        # draft tail rolled back by commit(skip=...) — while batch-mates
+        # accept/reject normally
+        skip = set()
+        for s, r in enumerate(sd.slots):
+            if r is None or not rnd.fed[s]:
+                continue
+            consumes = r.samples_this_step or s in rnd.proposals
+            if not consumes:
+                continue
+            if inj is not None and inj.corrupt_row(r.request_id):
+                if not rows.flags.writeable:     # np view of a jax buffer
+                    rows = rows.copy()
+                rows[s] = np.nan                 # physically poison the row
+            if not np.isfinite(rows[s, :rnd.fed[s]]).all():
+                stats.fault_nonfinite += 1
+                r.fault_failures += 1
+                skip.add(s)
+        spec.commit(rnd, rows, skip=skip)
+        for s in sorted(skip):
+            r = sd.slots[s]
+            if not r.is_finished \
+                    and r.fault_failures > cfg.max_request_failures:
+                self._quarantine(r)          # releases the slot wholesale
+        return True
+
+    def _spec_restore(self, rnd, e) -> None:
+        """Undo a failed verify attempt between retries: drain the failed
+        launch, restore every snapshotted dense slot.  Pages and host
+        bookkeeping never advanced; the drafter is NOT rolled back here —
+        the retry re-runs the identical launch, so its proposals stand."""
+        if not getattr(e, "enqueued", True):
+            return
+        eng = self.eng
+        eng.queue.finish()
+        for s, leaves in rnd.snaps.items():
+            r = rnd.sd.slots[s]
+            if r is not None and r.dense_slot is not None:
+                eng.store.restore_slot(r.dense_slot, leaves)
 
     # -- rollback / quarantine ----------------------------------------------
 

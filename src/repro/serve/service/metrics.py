@@ -65,6 +65,8 @@ class ServiceMetrics:
         self.n_shed = 0                 # policy rejections (admission layer)
         self.n_rejected = 0             # backpressure rejections (never a
         #                                 Request: max_pending was hit)
+        self.n_rate_limited = 0         # of the rejections, tenant
+        #                                 token-bucket refusals
         self.n_error = 0                # resilience quarantines ("error")
         self.n_drained = 0              # graceful-drain checkpoints ("drained")
         self.n_tokens = 0
@@ -79,6 +81,16 @@ class ServiceMetrics:
         self.n_prefix_tokens_reused = 0
         self.n_prefix_evictions = 0
         self.n_prompt_tokens_ingested = 0
+        # per-tenant quota accounting: tenant -> {requests, tokens,
+        # rate_limited} — requests/tokens at finish time, rate_limited at
+        # the rejection (the tenant never reached the engine)
+        self.tenant_usage: Dict[str, Dict[str, int]] = {}
+        # replica supervision (stay 0 for the in-process service): worker
+        # checkpoints, crash-triggered restarts, and per-restart recovery
+        # time (detect -> respawned-and-restored) — the MTTR distribution
+        self.n_checkpoints = 0
+        self.n_worker_restarts = 0
+        self._recovery: Deque[float] = deque(maxlen=window)
         # rolling per-token prefill time: EMA over finished requests of
         # (TTFT - queue wait) / prompt tokens.  The deadline admission
         # policy reads it (via prefill_estimate) to replace its static
@@ -99,6 +111,34 @@ class ServiceMetrics:
     def on_rejected(self) -> None:
         with self._lock:
             self.n_rejected += 1
+
+    def on_rate_limited(self, tenant: str) -> None:
+        """A tenant token bucket refused a submit (counted as a rejection
+        too: the request never became a Request)."""
+        with self._lock:
+            self.n_rejected += 1
+            self.n_rate_limited += 1
+            self._tenant(tenant)["rate_limited"] += 1
+
+    def on_checkpoint(self, n_requests: int = 0) -> None:
+        """The replica worker durably wrote one incremental checkpoint."""
+        with self._lock:
+            self.n_checkpoints += 1
+
+    def on_restart(self, recovery_s: float) -> None:
+        """One completed failover: crash detected -> fresh worker spawned,
+        checkpoint restored, in-flight requests re-queued."""
+        with self._lock:
+            self.n_worker_restarts += 1
+            self._recovery.append(recovery_s)
+
+    def _tenant(self, tenant: str) -> Dict[str, int]:
+        """(lock held) the tenant's quota-accounting row."""
+        u = self.tenant_usage.get(tenant)
+        if u is None:
+            u = self.tenant_usage[tenant] = {
+                "requests": 0, "tokens": 0, "rate_limited": 0}
+        return u
 
     def on_speculation(self, proposed: int, accepted: int,
                        rejected: int) -> None:
@@ -126,6 +166,9 @@ class ServiceMetrics:
     def observe(self, rm: RequestMetrics) -> None:
         with self._lock:
             self.records.append(rm)
+            u = self._tenant(rm.tenant)
+            u["requests"] += 1
+            u["tokens"] += rm.n_tokens
             if rm.ttft_s is not None and rm.n_prompt_tokens > 0:
                 # queue wait is dead time, not prefill work: subtract it so
                 # the estimate prices compute, and a loaded queue does not
@@ -165,6 +208,7 @@ class ServiceMetrics:
                 "cancelled": self.n_cancelled,
                 "shed": self.n_shed,
                 "rejected": self.n_rejected,
+                "rate_limited": self.n_rate_limited,
                 "error": self.n_error,
                 "drained": self.n_drained,
                 "tokens": self.n_tokens,
@@ -191,6 +235,13 @@ class ServiceMetrics:
                         + self.n_prompt_tokens_ingested else None),
                 },
                 "prefill_s_per_token": self._prefill_ema,
+                "tenants": {t: dict(u)
+                            for t, u in sorted(self.tenant_usage.items())},
+                "failover": {
+                    "checkpoints": self.n_checkpoints,
+                    "restarts": self.n_worker_restarts,
+                    "recovery_s": self._stats(self._recovery),
+                },
             }
 
     @staticmethod

@@ -40,7 +40,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import AsyncIterator, List, Optional, Sequence, Tuple
+from typing import (AsyncIterator, Dict, List, Optional, Sequence, Tuple)
 
 from repro.serve.engine.api import Completion, completion_of
 from repro.serve.engine.engine import ServingEngine
@@ -94,6 +94,14 @@ class ServiceConfig:
     # many seconds.  None disables the watchdog.  Size it generously —
     # first-step executable compilation counts against the deadline.
     watchdog_timeout_s: Optional[float] = None
+    # per-tenant token-bucket rate limits, ON TOP of whatever admission
+    # policy runs inside the scheduler (fair_share arbitrates WHO among
+    # admitted requests runs first; the buckets bound how fast each tenant
+    # may submit at all).  tenant -> (requests_per_s, burst); tenants
+    # absent from the map are unlimited.  A refused submit raises
+    # AdmissionRejected(reason="rate_limited") without ever constructing a
+    # Request, and is counted by ServiceMetrics per tenant.
+    tenant_rate_limits: Optional[Dict[str, Tuple[float, float]]] = None
 
     def __post_init__(self):
         if self.max_pending < 1:
@@ -101,6 +109,36 @@ class ServiceConfig:
         if self.watchdog_timeout_s is not None and self.watchdog_timeout_s <= 0:
             raise ValueError(
                 f"watchdog_timeout_s must be > 0: {self.watchdog_timeout_s}")
+        for tenant, (rate, burst) in (self.tenant_rate_limits or {}).items():
+            if rate <= 0:
+                raise ValueError(
+                    f"rate for tenant {tenant!r} must be > 0: {rate}")
+            if burst < 1:
+                raise ValueError(
+                    f"burst for tenant {tenant!r} must be >= 1: {burst}")
+
+
+class _TokenBucket:
+    """One tenant's refill bucket: ``burst`` capacity, ``rate`` tokens/s.
+    Callers pass the clock in so tests (and the metrics layer) never
+    wall-wait for a refill."""
+
+    __slots__ = ("rate", "burst", "level", "t")
+
+    def __init__(self, rate: float, burst: float, now: float):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.level = float(burst)       # a fresh tenant gets a full burst
+        self.t = now
+
+    def try_take(self, now: float, n: float = 1.0) -> bool:
+        self.level = min(self.burst,
+                         self.level + max(0.0, now - self.t) * self.rate)
+        self.t = now
+        if self.level >= n:
+            self.level -= n
+            return True
+        return False
 
 
 class ServiceStream:
@@ -210,6 +248,11 @@ class GenerateService:
             bind(engine, self.metrics)
         self._cmd: "queue.Queue[Tuple[str, object]]" = queue.Queue()
         self._streams: dict = {}                # engine-thread owned
+        # tenant token buckets (loop-side, under their own lock); _now is
+        # an attribute so tests can drive the refill clock directly
+        self._now = time.monotonic
+        self._buckets: Dict[str, _TokenBucket] = {}
+        self._bucket_lock = threading.Lock()
         # last-seen speculative EngineStats counters (engine-thread owned):
         # _pump folds the deltas into ServiceMetrics so snapshots track
         # acceptance live, even if the engine stats are reset between runs
@@ -302,6 +345,18 @@ class GenerateService:
         if self._draining:
             self.metrics.on_rejected()
             raise AdmissionRejected("service is draining")
+        limits = self.config.tenant_rate_limits
+        if limits is not None and tenant in limits:
+            with self._bucket_lock:
+                b = self._buckets.get(tenant)
+                if b is None:
+                    rate, burst = limits[tenant]
+                    b = self._buckets[tenant] = \
+                        _TokenBucket(rate, burst, self._now())
+                ok = b.try_take(self._now())
+            if not ok:
+                self.metrics.on_rate_limited(tenant)
+                raise AdmissionRejected("rate_limited")
         with self._inflight_lock:
             if self._inflight >= self.config.max_pending:
                 self.metrics.on_rejected()

@@ -35,7 +35,7 @@ rounds so it can re-enter speculation when its output turns predictable.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,25 @@ from repro.serve.engine.request import RequestState
 from repro.serve.spec.accept import accept_draft
 from repro.serve.spec.config import SpeculationConfig
 from repro.serve.spec.drafter import DraftModelDrafter, make_drafter
+
+
+class _SpecRound:
+    """One speculative round's in-flight state, from the moment drafts are
+    proposed (pages ensured, dense slots snapshotted) until every slot is
+    committed or rolled back.  The decoder keeps the CURRENT round on
+    itself so :meth:`SpecDecoder.rollback_in_flight` — called by the step
+    guard on an aborted verify launch and by ``drain_to`` before a
+    checkpoint — can always rewind the uncommitted draft tail."""
+
+    __slots__ = ("sd", "proposals", "snaps", "fed",
+                 "tokens", "pos", "n_valid", "table", "slots", "pending")
+
+    def __init__(self, sd):
+        self.sd = sd
+        self.proposals: Dict[int, List[int]] = {}
+        self.snaps: Dict[int, dict] = {}
+        self.fed: List[int] = []
+        self.pending: Set[int] = set()     # slots not yet committed/rolled
 
 
 class SpecDecoder:
@@ -71,6 +90,7 @@ class SpecDecoder:
         self._kernels: Dict[int, HybridKernel] = {}
         self._ema: Dict[str, float] = {}       # request -> acceptance EMA
         self._idle_rounds: Dict[str, int] = {}  # rounds since last probe
+        self._round: Optional[_SpecRound] = None  # the in-flight round
 
     # -- the verify executable ---------------------------------------------
 
@@ -123,15 +143,21 @@ class SpecDecoder:
 
     # -- the speculative step ----------------------------------------------
 
-    def step(self, sd) -> bool:
-        """Try one speculative step for the scheduled batch ``sd``.
-        Returns False (caller falls back to the plain decode launch) when
-        no slot yields a usable draft this round."""
+    def prepare(self, sd) -> Optional[_SpecRound]:
+        """Phase 1: draft + reserve.  Builds this round's proposals
+        (drafter queries, page ensures for every fed position) and
+        snapshots EVERY active dense slot — riders included, since the
+        verify launch advances their recurrent state too and an aborted
+        round must be able to restore all of it.  Returns None when no
+        slot yields a usable draft (caller falls back to plain decode).
+        On success the round is registered as in-flight until
+        :meth:`commit` or :meth:`rollback_in_flight` resolves it."""
         eng = self.eng
         ec = eng.engine_cfg
         stride = eng.pool.block_pos_stride
         B = sd.bucket
-        proposals: Dict[int, List[int]] = {}
+        rnd = _SpecRound(sd)
+        proposals = rnd.proposals
         for s, r in enumerate(sd.slots):
             if r is None or not r.samples_this_step:
                 continue
@@ -158,45 +184,66 @@ class SpecDecoder:
                         continue
             proposals[s] = toks
         if not proposals:
-            return False
+            return None
 
-        # dense (recurrent) slots advance through every fed position in the
-        # verify launch, accepted or not: snapshot them first so a partial
-        # acceptance can restore (paged KV needs no snapshot — stale
-        # entries are causally masked)
-        snaps = {}
+        # dense (recurrent) slots advance through every fed position in
+        # the verify launch, accepted or not: snapshot every active slot
+        # first so a partial acceptance — or a faulted/aborted round —
+        # can restore (paged KV needs no snapshot: stale entries are
+        # causally masked)
         if eng.store.has_dense:
-            for s in proposals:
-                snaps[s] = eng.store.read_slot(sd.slots[s].dense_slot)
+            for s, r in enumerate(sd.slots):
+                if r is not None:
+                    rnd.snaps[s] = eng.store.read_slot(r.dense_slot)
 
         L = self.cfg.k + 1
         has_pages = eng.store.needs_pages
         has_dense = eng.store.has_dense
-        tokens = np.zeros((B, L), np.int32)
-        pos = np.zeros((B,), np.int32)
-        n_valid = np.zeros((B,), np.int32)
-        table = np.full((B, eng._table_width), -1, np.int32)
-        slots = np.full((B,), -1, np.int32)
-        fed = [0] * B
+        rnd.tokens = np.zeros((B, L), np.int32)
+        rnd.pos = np.zeros((B,), np.int32)
+        rnd.n_valid = np.zeros((B,), np.int32)
+        rnd.table = np.full((B, eng._table_width), -1, np.int32)
+        rnd.slots = np.full((B,), -1, np.int32)
+        rnd.fed = [0] * B
         for s, r in enumerate(sd.slots):
             if r is None:
                 continue
             feed = [r.next_token] + proposals.get(s, [])
-            tokens[s, :len(feed)] = feed
-            pos[s] = r.num_cached
-            n_valid[s] = len(feed)
-            fed[s] = len(feed)
+            rnd.tokens[s, :len(feed)] = feed
+            rnd.pos[s] = r.num_cached
+            rnd.n_valid[s] = len(feed)
+            rnd.fed[s] = len(feed)
+            rnd.pending.add(s)
             if has_pages:
-                table[s, :len(r.blocks.ids)] = r.blocks.ids
+                rnd.table[s, :len(r.blocks.ids)] = r.blocks.ids
             if has_dense:
-                slots[s] = r.dense_slot
+                rnd.slots[s] = r.dense_slot
+        self._round = rnd
+        return rnd
+
+    def launch(self, rnd: _SpecRound) -> np.ndarray:
+        """Phase 2: ONE ``verify_bs{N}_len{k+1}`` enqueue; returns the
+        materialized logits rows.  Mutates no host request state, so a
+        guarded retry can call it again after restoring dense snapshots
+        (the injector's ``launch`` site fires before the enqueue,
+        ``device`` after — the same contract as ``ServingEngine._launch``).
+        """
+        eng = self.eng
+        has_pages = eng.store.needs_pages
+        has_dense = eng.store.has_dense
         dev = lambda a: jax.device_put(jnp.asarray(a), eng._vec_sharding)
         dev2 = lambda a: jax.device_put(jnp.asarray(a), eng._table_sharding)
-        ops = ([dev2(table)] if has_pages else []) \
-            + ([dev(slots)] if has_dense else [])
+        ops = ([dev2(rnd.table)] if has_pages else []) \
+            + ([dev(rnd.slots)] if has_dense else [])
+        inj = eng.engine_cfg.fault_injector
+        if inj is not None:
+            inj.fire("launch")
         logits, eng.store.arena = eng.queue.enqueue(
-            self._kernel(B), eng.params, eng.store.arena,
-            dev2(tokens), dev(pos), dev(n_valid), *ops)
+            self._kernel(rnd.sd.bucket), eng.params, eng.store.arena,
+            dev2(rnd.tokens), dev(rnd.pos), dev(rnd.n_valid), *ops)
+        if inj is not None:
+            inj.fire("device")      # the enqueue "happened"; stats below
+            #                         only count rounds that got this far
         st = eng.stats
         st.steps += 1
         st.spec_launches += 1
@@ -204,14 +251,81 @@ class SpecDecoder:
         if eng.store.slot_pool is not None:
             st.peak_dense_slots_used = max(st.peak_dense_slots_used,
                                            eng.store.slot_pool.n_used)
-        rows = np.asarray(logits[:, :, :eng.cfg.vocab_size])
+        return np.asarray(logits[:, :, :eng.cfg.vocab_size])
+
+    def rollback_in_flight(self) -> int:
+        """Rewind the uncommitted draft tail of the in-flight round (if
+        any): restore every pending slot's pre-launch dense snapshot, free
+        the pages ensured for its drafts, and truncate the drafter's state
+        back to the committed sequence.  Host request state (``num_cached``
+        / ``output_tokens``) never advances before commit, so after this
+        the engine is exactly at its last committed position — the state a
+        drain checkpoint must capture.  Returns the number of slots rolled
+        back; safe to call at any time (no-op between rounds)."""
+        rnd, self._round = self._round, None
+        if rnd is None:
+            return 0
+        eng = self.eng
+        n = 0
+        for s in sorted(rnd.pending):
+            r = rnd.sd.slots[s]
+            if r is None:
+                continue
+            n += 1
+            if s in rnd.snaps and r.dense_slot is not None:
+                eng.store.restore_slot(r.dense_slot, rnd.snaps[s])
+            if s in rnd.proposals:
+                if eng.store.needs_pages:
+                    r.blocks.rewind(len(r.seq_tokens) + 1)
+                self.drafter.rollback(r)
+        if n:
+            eng.stats.spec_rollbacks += 1
+        return n
+
+    def step(self, sd) -> bool:
+        """Try one speculative step for the scheduled batch ``sd``.
+        Returns False (caller falls back to the plain decode launch) when
+        no slot yields a usable draft this round.  The guarded engine
+        drives the phases individually (``StepGuard.spec_step``); this is
+        the plain unguarded composition."""
+        rnd = self.prepare(sd)
+        if rnd is None:
+            return False
+        rows = self.launch(rnd)
         # clFinish BEFORE the commit loop: a dense rollback below donates
         # the arena through restore_slot, which would delete the buffers a
         # later finish() blocks on (the logits are already materialized)
-        eng.queue.finish()
+        self.eng.queue.finish()
+        self.commit(rnd, rows)
+        return True
 
+    def commit(self, rnd: _SpecRound, rows: np.ndarray,
+               skip=frozenset()) -> None:
+        """Phase 3: accept/reject every slot's draft against the verify
+        logits and advance the request state machine.  Slots in ``skip``
+        (guard-poisoned rows) commit NOTHING: their pre-launch dense
+        snapshot is restored and their draft-tail pages freed, so the next
+        step re-feeds the same positions.  The caller must have drained
+        the queue (``finish()``) first."""
+        eng = self.eng
+        ec = eng.engine_cfg
+        st = eng.stats
+        sd = rnd.sd
+        proposals, snaps, fed = rnd.proposals, rnd.snaps, rnd.fed
+        has_pages = eng.store.needs_pages
+        has_dense = eng.store.has_dense
         for s, r in enumerate(sd.slots):
             if r is None:
+                continue
+            rnd.pending.discard(s)
+            if s in skip:
+                if s in snaps and r.dense_slot is not None:
+                    eng.store.restore_slot(r.dense_slot, snaps[s])
+                if s in proposals and has_pages:
+                    if r.blocks.rewind(len(r.seq_tokens) + 1):
+                        st.spec_rollbacks += 1
+                if s in proposals:
+                    self.drafter.rollback(r)
                 continue
             prev_nc = r.num_cached
             toks = proposals.get(s, [])
@@ -224,6 +338,7 @@ class SpecDecoder:
                 # mid-prefill ride-along (chunking disabled): plain 1-token
                 # ingestion, no sampling
                 r.num_cached += 1
+                r.fault_failures = 0
                 eng._publish_filled_pages(r, prev_nc, r.num_cached)
                 eng._maybe_publish_dense(r)
                 continue
@@ -241,6 +356,8 @@ class SpecDecoder:
             st.spec_accepted_tokens += a
             st.spec_rejected_tokens += len(toks) - a
             self._update_ema(r, a, len(toks))
+            r.fault_failures = 0    # a committed round clears the
+            #                         quarantine count, like _commit
             finish = None
             j = 0
             for tok in emitted:
@@ -284,4 +401,4 @@ class SpecDecoder:
                 # pages beyond the sequence's need (+1 lookahead)
                 if r.blocks.rewind(len(r.seq_tokens) + 1):
                     st.spec_rollbacks += 1
-        return True
+        self._round = None          # every slot resolved: nothing in flight

@@ -46,11 +46,16 @@ class Drafter(Protocol):
     """The pluggable proposal source.  ``propose`` returns UP TO ``k``
     draft tokens extending ``request.seq_tokens`` (possibly empty — the
     slot then rides the verify launch as a plain decode, or the whole
-    step falls back); ``release`` drops any per-request state."""
+    step falls back); ``rollback`` rewinds any state ``propose`` advanced
+    past the request's COMMITTED sequence (an aborted verify round never
+    committed its draft tail); ``release`` drops any per-request state."""
 
     name: str
 
     def propose(self, request, k: int) -> List[int]:
+        ...
+
+    def rollback(self, request) -> None:
         ...
 
     def release(self, request_id: str) -> None:
@@ -89,6 +94,9 @@ class NgramDrafter:
             return []
         return _find_continuation(request.seq_tokens, k,
                                   self.ngram_max, self.ngram_min)
+
+    def rollback(self, request) -> None:
+        pass        # stateless: every propose() reads the live sequence
 
     def release(self, request_id: str) -> None:
         pass
@@ -255,6 +263,25 @@ class DraftModelDrafter:
             seq.fed.append(out[-1])
             out.append(int(np.argmax(row)))
         return out
+
+    def rollback(self, request) -> None:
+        """Truncate the fed record to the request's committed sequence —
+        the aborted round's catch-up/draft feeds never land in the target,
+        so the draft cache must forget them too (stale draft KV past the
+        truncation point is causally masked, nothing touches the device).
+        ``propose`` would self-heal via the same common-prefix truncation
+        next round; doing it eagerly keeps the drafter consistent at drain
+        checkpoints and across guard retries."""
+        seq = self._seqs.get(request.request_id)
+        if seq is None:
+            return
+        hist = request.seq_tokens
+        cp = 0
+        while cp < len(seq.fed) and cp < len(hist) \
+                and seq.fed[cp] == hist[cp]:
+            cp += 1
+        del seq.fed[cp:]
+        seq.blocks.rewind(max(1, len(seq.fed)))
 
     def release(self, request_id: str) -> None:
         seq = self._seqs.pop(request_id, None)

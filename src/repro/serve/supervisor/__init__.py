@@ -1,0 +1,27 @@
+"""Crash-safe replica supervision for the serving engine.
+
+Three pieces (docs/serving.md §Supervisor & failover):
+
+  * :mod:`~repro.serve.supervisor.spec` — :class:`EngineSpec`, the
+    picklable recipe a fresh process rebuilds the identical engine from
+    (mesh from the MeshPlan, params from the seed).
+  * :mod:`~repro.serve.supervisor.worker` — the child-process drive loop:
+    step, pump token events, periodic incremental drain checkpoints
+    (tmp + fsync + rename, CRC header, previous-good rotation).
+  * :mod:`~repro.serve.supervisor.supervisor` —
+    :class:`ReplicaSupervisor`: the asyncio front-end that detects replica
+    death (exit / pipe EOF / watchdog), restores the last good checkpoint
+    into a freshly spawned worker, resumes every open stream with
+    high-water-mark token dedup, and contains crash loops behind an
+    exponential-backoff ``max_respawns`` budget.
+"""
+
+from repro.serve.supervisor.spec import EngineSpec
+from repro.serve.supervisor.supervisor import (ReplicaSupervisor,
+                                               SupervisorConfig)
+from repro.serve.supervisor.worker import WorkerConfig, worker_main
+
+__all__ = [
+    "EngineSpec", "ReplicaSupervisor", "SupervisorConfig", "WorkerConfig",
+    "worker_main",
+]

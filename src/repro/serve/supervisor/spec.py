@@ -1,0 +1,54 @@
+"""Picklable engine recipe: rebuild the SAME ServingEngine in a fresh process.
+
+A :class:`jax.sharding.Mesh` holds live device objects and cannot cross a
+process boundary; model parameters could, but shipping them through a pipe
+would dwarf every other supervisor cost.  So the replica worker receives
+neither — it receives this recipe and rebuilds both: the mesh from the
+:class:`~repro.partition.MeshPlan`'s axis names/sizes (host devices are
+pinned by ``XLA_FLAGS``, which the spawned child inherits from the parent
+environment), and the parameters from the deterministic seed-keyed
+initializer.  Two processes building from the same spec therefore hold
+bit-identical engines — the property the supervisor's token-for-token
+failover parity stands on.
+
+Everything referenced here must survive ``pickle`` under the
+``multiprocessing`` *spawn* start method (fork is unsafe once the parent
+has initialized JAX): :class:`~repro.models.config.ModelConfig`,
+:class:`~repro.partition.MeshPlan` and
+:class:`~repro.serve.engine.engine.EngineConfig` are plain dataclasses;
+an :class:`~repro.serve.resilience.faults.FaultInjector` inside the engine
+config pickles with its seed and rng state, so every worker incarnation
+starts an identical fault schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.partition import MeshPlan
+from repro.serve.engine.engine import EngineConfig, ServingEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Everything a fresh process needs to rebuild one serving replica."""
+
+    model_cfg: object                 # repro.models.config.ModelConfig
+    plan: MeshPlan
+    engine_cfg: EngineConfig
+    seed: int = 0                     # params are a pure function of this
+
+    def make_mesh(self):
+        """Rebuild the device mesh the plan describes (local devices)."""
+        import jax
+        return jax.make_mesh(
+            self.plan.axis_sizes, self.plan.axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,)
+            * len(self.plan.axis_names))
+
+    def build(self) -> ServingEngine:
+        """Construct the engine — params initialized from ``seed``, so
+        every incarnation built from this spec is parameter-identical."""
+        from repro.serve.engine.api import build_engine
+        return build_engine(self.model_cfg, self.make_mesh(), self.plan,
+                            engine_cfg=self.engine_cfg, seed=self.seed)

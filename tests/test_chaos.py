@@ -277,3 +277,42 @@ def test_unguarded_engine_unchanged(mesh16, plan16):
     assert all(g.finish_reason == "length" for g in got)
     assert eng.stats.fault_launch_failures == 0
     assert eng.stats.fault_quarantined == 0
+
+
+@pytest.mark.parametrize("cfg", [ATTN, HYBRID], ids=["attn", "hybrid"])
+def test_speculative_chaos_parity(cfg, mesh16, plan16):
+    """Speculation under the guard: launch/device/nan faults landing on
+    VERIFY rounds must roll back the whole draft tail (verify pages AND
+    drafter state, dense snapshots restored) before the retry — so every
+    fault-free-surviving request keeps token-for-token greedy parity with
+    a fault-free NON-speculative engine, and accounting drains to zero."""
+    from repro.serve.spec import SpeculationConfig
+
+    ref = _engine(cfg, mesh16, plan16)
+    # tiled short patterns: the regime ngram drafting actually fires in
+    rng = np.random.default_rng(11)
+    prompts = []
+    for _ in range(6):
+        pat = rng.integers(0, cfg.vocab_size,
+                           size=int(rng.integers(2, 5))).tolist()
+        prompts.append((pat * 6)[:12])
+    expect = generate(ref, prompts, SamplingParams(max_tokens=8))
+
+    inj = FaultInjector(77, {"launch": 0.12, "device": 0.08,
+                             "nan_logits": 0.05},
+                        max_faults=40)
+    eng = _engine(cfg, mesh16, plan16, fault_injector=inj,
+                  resilience=ResilienceConfig(max_request_failures=2),
+                  speculation=SpeculationConfig(drafter="ngram", k=3))
+    eng.params = ref.params
+    got = generate(eng, prompts, SamplingParams(max_tokens=8))
+
+    assert inj.n_fired > 0                       # the soak actually soaked
+    assert eng.stats.spec_launches > 0           # speculation actually ran
+    for g, e in zip(got, expect):
+        assert g.finish_reason is not None
+        if g.finish_reason == "error":
+            continue                             # quarantined: allowed
+        assert g.tokens == e.tokens              # survivors: exact parity
+        assert g.finish_reason == e.finish_reason
+    _assert_drained(eng)

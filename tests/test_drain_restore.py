@@ -139,6 +139,85 @@ def test_restore_rejects_unknown_version(mesh16, plan16, tmp_path):
         eng.restore_from(str(path))
 
 
+# -- checkpoint durability: corruption -> previous-good fallback -------------
+#
+# Pure host-level coverage of the version-2 integrity header: every way a
+# checkpoint can land bad on disk (truncation, bit rot, a future writer)
+# must fall back to the ``.prev`` previous-good rotation, and fail CLOSED
+# — never parse garbage as truth — when no good file exists.
+
+def _two_checkpoints(tmp_path):
+    """Write two generations; returns (path, old payload, new payload).
+    After the second write, ``path + ".prev"`` holds the first."""
+    from repro.serve.resilience.checkpoint import write_checkpoint
+    path = str(tmp_path / "ckpt.json")
+    old = {"version": 2, "requests": [{"request_id": "req-old"}]}
+    new = {"version": 2, "requests": [{"request_id": "req-new"}]}
+    write_checkpoint(old, path)
+    write_checkpoint(new, path)
+    return path, old, new
+
+
+def test_checkpoint_rotation_keeps_previous_good(tmp_path):
+    from repro.serve.resilience.checkpoint import (PREV_SUFFIX,
+                                                   _parse_checkpoint,
+                                                   load_checkpoint)
+    path, old, new = _two_checkpoints(tmp_path)
+    assert load_checkpoint(path) == new
+    assert _parse_checkpoint(path + PREV_SUFFIX) == old
+
+
+@pytest.mark.parametrize("corrupt", ["truncate", "bitflip", "future_version"])
+def test_corrupt_current_falls_back_to_previous_good(tmp_path, corrupt):
+    """Truncated body, CRC mismatch, and a future-version header all
+    reject the current file and load the ``.prev`` rotation instead."""
+    from repro.serve.resilience.checkpoint import load_checkpoint
+    path, old, _ = _two_checkpoints(tmp_path)
+    raw = open(path, "rb").read()
+    if corrupt == "truncate":
+        bad = raw[: len(raw) - 7]
+    elif corrupt == "bitflip":
+        bad = raw[:-4] + bytes([raw[-4] ^ 0x10]) + raw[-3:]
+    else:
+        nl = raw.find(b"\n")
+        import json
+        hdr = json.loads(raw[:nl])
+        hdr["version"] = 99
+        bad = json.dumps(hdr).encode() + raw[nl:]
+    with open(path, "wb") as f:
+        f.write(bad)
+    assert load_checkpoint(path) == old          # previous-good fallback
+
+
+def test_no_good_checkpoint_fails_closed(tmp_path):
+    """Both current and previous-good corrupt: restore must raise (with
+    both failures named), never hand back a torn payload."""
+    from repro.serve.resilience.checkpoint import PREV_SUFFIX, load_checkpoint
+    path, _, _ = _two_checkpoints(tmp_path)
+    for p in (path, path + PREV_SUFFIX):
+        raw = open(p, "rb").read()
+        with open(p, "wb") as f:
+            f.write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="no good drain checkpoint"):
+        load_checkpoint(path)
+    # ... and a corrupt current with NO .prev at all also fails closed
+    import os
+    os.unlink(path + PREV_SUFFIX)
+    with pytest.raises(ValueError):
+        load_checkpoint(path)
+
+
+def test_legacy_v1_checkpoint_still_loads(tmp_path):
+    """Version-1 files (one plain JSON document, no integrity header)
+    stay readable."""
+    from repro.serve.resilience.checkpoint import load_checkpoint
+    path = tmp_path / "v1.json"
+    payload = {"version": 1, "requests": [{"request_id": "r0"}]}
+    import json
+    path.write_text(json.dumps(payload))
+    assert load_checkpoint(str(path)) == payload
+
+
 # -- service-level drain/restore ---------------------------------------------
 
 def test_service_drain_restore_roundtrip(mesh16, plan16, tmp_path):

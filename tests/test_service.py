@@ -206,3 +206,53 @@ def test_service_stop_cancels_outstanding_streams(mesh16, plan16):
     stream, tok = asyncio.run(main())
     assert stream.request.finish_reason == "cancelled"
     assert eng.pool.n_free == eng.pool.n_blocks
+
+
+# -- per-tenant rate limits --------------------------------------------------
+
+def test_tenant_rate_limit_rejects_then_refills(mesh16, plan16):
+    """Exhausting a tenant's burst raises AdmissionRejected with
+    ``reason == "rate_limited"``; the bucket refills with (virtual) time;
+    tenants absent from the map are never limited."""
+    eng = _engine(mesh16, plan16)
+    p = _prompts(1, rng_seed=9)[0]
+
+    async def main():
+        metrics = ServiceMetrics()
+        cfg = ServiceConfig(max_pending=16,
+                            tenant_rate_limits={"tiny": (2.0, 2.0)})
+        async with GenerateService(eng, cfg, metrics=metrics) as svc:
+            # virtual clock: no wall-waiting for refills
+            now = [1000.0]
+            svc._now = lambda: now[0]
+
+            s1 = await svc.submit(p, max_tokens=2, tenant="tiny")
+            s2 = await svc.submit(p, max_tokens=2, tenant="tiny")
+            with pytest.raises(AdmissionRejected) as ei:     # burst spent
+                await svc.submit(p, max_tokens=2, tenant="tiny")
+            assert ei.value.reason == "rate_limited"
+            # an unlimited tenant is unaffected by tiny's empty bucket
+            s3 = await svc.submit(p, max_tokens=2, tenant="big")
+            now[0] += 0.5                    # 2 tok/s * 0.5 s -> one token
+            s4 = await svc.submit(p, max_tokens=2, tenant="tiny")
+            for s in (s1, s2, s3, s4):
+                await s.drain()
+        return metrics
+
+    metrics = asyncio.run(main())
+    snap = metrics.snapshot()
+    assert snap["rate_limited"] == 1
+    assert snap["rejected"] == 1             # a rate-limit IS a rejection
+    assert snap["submitted"] == 4
+    # quota accounting: finished usage per tenant + the refusal
+    assert snap["tenants"]["tiny"] == \
+        {"requests": 3, "tokens": 6, "rate_limited": 1}
+    assert snap["tenants"]["big"] == \
+        {"requests": 1, "tokens": 2, "rate_limited": 0}
+
+
+def test_tenant_rate_limit_config_validation():
+    with pytest.raises(ValueError, match="rate"):
+        ServiceConfig(tenant_rate_limits={"t": (0.0, 4.0)})
+    with pytest.raises(ValueError, match="burst"):
+        ServiceConfig(tenant_rate_limits={"t": (1.0, 0.5)})

@@ -335,3 +335,64 @@ def test_ema_falls_back_to_plain_decode_then_probes(mesh16, plan16):
     # plain decode, and proposals shrink to 1-token probes
     assert st.decode_launches > 0
     assert st.spec_launches < st.decode_launches
+
+
+def test_drain_mid_speculation_rolls_back_uncommitted_tail(mesh16, plan16,
+                                                           tmp_path):
+    """Regression (the drain-vs-speculation race): ``drain_to()`` called
+    while a verify round is IN FLIGHT — drafts proposed, pages ensured,
+    dense snapshots taken, the launch possibly already enqueued — must
+    roll the uncommitted tail back FIRST (restore dense slots, rewind
+    draft pages, truncate the drafter), so the checkpoint captures the
+    last committed position and the restored continuation still matches
+    the uninterrupted run token for token."""
+    path = str(tmp_path / "drain.json")
+    prompts = _repetitive_prompts(np.random.default_rng(6), 3,
+                                  HYBRID.vocab_size)
+    sampling = SamplingParams(max_tokens=16)
+
+    ec_off = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4),
+                          block_pos_stride=8)
+    ref = build_engine(HYBRID, mesh16, plan16, engine_cfg=ec_off, seed=0)
+    expect = generate(ref, prompts, sampling)
+
+    ec_on = EngineConfig(s_max=S_MAX, buckets=(1, 2, 4), block_pos_stride=8,
+                         speculation=SpeculationConfig(drafter="ngram", k=3))
+    eng = build_engine(HYBRID, mesh16, plan16, engine_cfg=ec_on, seed=0)
+    eng.params = ref.params
+    reqs = [eng.submit(p, sampling) for p in prompts]
+    for _ in range(4):                  # past prefill, into spec decode
+        eng.step()
+    assert any(r.output_tokens for r in reqs)
+    assert not all(r.is_finished for r in reqs)
+
+    # open a verify round by hand and leave it UNCOMMITTED: this is the
+    # exact state drain_to interrupts when it lands mid-speculation
+    sd = eng.scheduler.schedule()
+    rnd = eng.spec.prepare(sd)
+    assert rnd is not None              # repetitive prompts always draft
+    eng.spec.launch(rnd)
+    eng.queue.finish()
+    assert eng.spec._round is rnd
+    committed = {r.request_id: list(r.output_tokens) for r in reqs}
+    restores_before = eng.store.n_restores
+
+    n = eng.drain_to(path)
+    assert n > 0
+    assert eng.spec._round is None              # tail rolled back...
+    assert eng.store.n_restores > restores_before   # ...dense state restored
+    assert eng.pool.n_free == eng.pool.n_blocks     # ...draft pages freed
+    # the checkpoint holds exactly the committed outputs, no draft tokens
+    for r in reqs:
+        assert list(r.output_tokens[:len(committed[r.request_id])]) == \
+            committed[r.request_id]
+
+    eng2 = build_engine(HYBRID, mesh16, plan16, engine_cfg=ec_on, seed=0)
+    eng2.params = ref.params
+    restored = eng2.restore_from(path)
+    eng2.drain()
+    pos = {r.request_id: i for i, r in enumerate(reqs)}
+    for r in restored:
+        e = expect[pos[r.request_id]]
+        assert r.output_tokens == e.tokens
+        assert r.finish_reason == e.finish_reason

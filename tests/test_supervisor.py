@@ -1,0 +1,276 @@
+"""Crash-safe replica supervisor: failover parity, containment, dedup.
+
+The load-bearing assertion extends the repo's parity invariant across a
+PROCESS boundary: SIGKILLing the replica worker mid-generation any number
+of times must be invisible to every client — the concatenation of streamed
+tokens equals the uninterrupted run token for token (zero duplicated, zero
+dropped: already-delivered tokens are deduplicated against each stream's
+high-water mark while the fresh worker replays from the last good
+checkpoint), and the final restore leaks no pages or dense slots.  Crash
+loops that outrun the checkpoint cadence must NOT retry forever: the
+``max_respawns`` budget ends surviving streams as ``"error"`` and flips
+the supervisor unhealthy.
+
+These tests spawn real worker processes (multiprocessing spawn); each
+spawn pays a child jax import + engine build, so the soak matrix is kept
+deliberately small.
+"""
+
+import asyncio
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.runtime.retry import RetryPolicy
+from repro.serve.engine import EngineConfig, SamplingParams, generate
+from repro.serve.resilience import FaultInjector
+from repro.serve.service import ServiceError
+from repro.serve.supervisor import (EngineSpec, ReplicaSupervisor,
+                                    SupervisorConfig)
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32,
+           attn_block_kv=32)
+ATTN = ModelConfig(name="att", family="dense", d_model=64, n_layers=2,
+                   n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=128, **F32)
+HYBRID = ModelConfig(
+    name="hyb", family="hybrid", d_model=64, n_layers=2, n_heads=8,
+    n_kv_heads=4, d_ff=128, vocab_size=128, d_inner=128, ssm_heads=8,
+    ssm_headdim=16, ssm_state=16, ssm_groups=4,
+    layer_pattern=(("attn", "mlp"), ("mamba", "mlp")), sub_quadratic=True,
+    **F32)
+S_MAX = 32
+
+
+def _spec(cfg, plan, **kw):
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("max_steps", 2000)
+    ec = EngineConfig(s_max=S_MAX, block_pos_stride=4, **kw)
+    return EngineSpec(model_cfg=cfg, plan=plan, engine_cfg=ec, seed=0)
+
+
+def _prompts(cfg, n, rng_seed=0, lo=2, hi=10):
+    rng = np.random.default_rng(rng_seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+def _mixed_sampling(n, max_tokens):
+    """Alternate greedy and temperature sampling so every soak covers
+    both: temperature continuations lean on the checkpointed rng state."""
+    return [SamplingParams(max_tokens=max_tokens)
+            if i % 2 == 0 else
+            SamplingParams(max_tokens=max_tokens, temperature=0.8,
+                           seed=100 + i)
+            for i in range(n)]
+
+
+async def _run_with_kills(spec, prompts, sampling, sup_cfg, kill_at):
+    """Drive one supervised run, hard-killing the worker each time the
+    total delivered-token count crosses a ``kill_at`` threshold.  Returns
+    (per-stream streamed tokens, completions, supervisor, replica stats).
+    """
+    async with ReplicaSupervisor(spec, sup_cfg) as sup:
+        streams = [await sup.submit(p, max_tokens=sp.max_tokens,
+                                    temperature=sp.temperature,
+                                    seed=sp.seed)
+                   for p, sp in zip(prompts, sampling)]
+        streamed = {s.request_id: [] for s in streams}
+        comps = {}
+
+        async def consume(s):
+            async for tok in s:
+                streamed[s.request_id].append(tok)
+            comps[s.request_id] = s.completion
+
+        tasks = [asyncio.create_task(consume(s)) for s in streams]
+
+        async def killer():
+            for i, threshold in enumerate(kill_at):
+                while sum(len(v) for v in streamed.values()) < threshold:
+                    await asyncio.sleep(0.01)
+                await sup.kill_replica()
+                # wait for the failover before arming the next kill, so
+                # each kill lands on a distinct incarnation
+                while sup.n_spawns < i + 2:
+                    await asyncio.sleep(0.05)
+
+        await asyncio.gather(killer(), *tasks)
+        stats = await sup.replica_stats()
+        return ([streamed[s.request_id] for s in streams],
+                [comps[s.request_id] for s in streams], sup, stats)
+
+
+@pytest.mark.parametrize("cfg", [ATTN, HYBRID], ids=["attn", "hybrid"])
+def test_failover_token_parity_zero_dup_zero_drop(cfg, plan16, tmp_path):
+    """The acceptance soak: kill the worker mid-generation twice (greedy
+    AND temperature requests in the same batch); every stream's tokens
+    equal the uninterrupted reference exactly, the stream content equals
+    the completion (no duplicate, no dropped token), and the final worker
+    holds zero pages/slots after the restores."""
+    spec = _spec(cfg, plan16)
+    prompts = _prompts(cfg, 6, rng_seed=1)
+    sampling = _mixed_sampling(6, max_tokens=8)
+    expect = generate(spec.build(), prompts, sampling)
+
+    sup_cfg = SupervisorConfig(
+        checkpoint_path=str(tmp_path / "replica.ckpt"),
+        checkpoint_every_steps=2, fsync=False, max_respawns=5)
+    streamed, comps, sup, stats = asyncio.run(_run_with_kills(
+        spec, prompts, sampling, sup_cfg, kill_at=(6, 20)))
+
+    assert sup.n_failovers == 2 and sup.n_spawns == 3
+    for got, comp, e in zip(streamed, comps, expect):
+        assert got == e.tokens                  # token-for-token parity
+        assert comp.tokens == got               # zero dup / zero drop
+        assert comp.finish_reason == e.finish_reason
+    # zero leaked pages/slots after the final restore
+    assert stats["pool_free"] == stats["pool_blocks"]
+    assert stats["dense_slots_used"] == 0
+    assert stats["live_requests"] == 0
+    snap = sup.metrics.snapshot()
+    assert snap["failover"]["restarts"] == 2
+    assert snap["failover"]["checkpoints"] >= 1
+    assert snap["failover"]["recovery_s"]["max"] > 0
+
+
+def test_injected_kill_and_checkpoint_corruption_roundtrip(plan16,
+                                                           tmp_path):
+    """The chaos path end to end: the worker's own injector hard-kills the
+    process mid-soak and corrupts checkpoints as they land (truncation),
+    so failover exercises the previous-good fallback — completions still
+    reach full greedy parity with the fault-free reference."""
+    clean = _spec(ATTN, plan16)
+    prompts = _prompts(ATTN, 4, rng_seed=3)
+    sampling = [SamplingParams(max_tokens=8)] * 4
+    expect = generate(clean.build(), prompts, sampling)
+
+    # seed 1's replayed schedule (every incarnation pickles the same
+    # injector snapshot): corrupt the checkpoints after steps 2 and 4,
+    # hard-kill at step 7 — so the step-6 checkpoint is the good one and
+    # each incarnation makes forward progress past the last
+    inj = FaultInjector(1, {"process_kill": 0.06, "checkpoint_corrupt": 0.5},
+                        max_faults=6)
+    spec = _spec(ATTN, plan16, fault_injector=inj)
+    sup_cfg = SupervisorConfig(
+        checkpoint_path=str(tmp_path / "replica.ckpt"),
+        checkpoint_every_steps=2, fsync=False, max_respawns=10)
+    streamed, comps, sup, stats = asyncio.run(_run_with_kills(
+        spec, prompts, sampling, sup_cfg, kill_at=()))
+
+    assert sup.n_failovers >= 1                  # the injector actually killed
+    assert sup.n_ckpt_corruptions >= 1           # ... and actually corrupted
+    for got, comp, e in zip(streamed, comps, expect):
+        assert got == e.tokens
+        assert comp.tokens == got
+    assert stats["pool_free"] == stats["pool_blocks"]
+    assert stats["live_requests"] == 0
+
+
+def test_crash_loop_containment_budget(plan16, tmp_path):
+    """Kills faster than the checkpoint cadence exhaust ``max_respawns``:
+    surviving streams end ``finish_reason == "error"`` with their
+    delivered tokens retained, the supervisor reports unhealthy, and new
+    submits fail fast — no infinite respawn loop."""
+    spec = _spec(ATTN, plan16)
+    [prompt] = _prompts(ATTN, 1, rng_seed=2, lo=3, hi=6)
+    sup_cfg = SupervisorConfig(
+        checkpoint_path=str(tmp_path / "replica.ckpt"),
+        checkpoint_every_steps=10**6,       # no checkpoint ever lands
+        fsync=False, max_respawns=1,
+        respawn_backoff=RetryPolicy(max_retries=0, backoff_s=0.01,
+                                    growth=2.0, max_backoff_s=0.1))
+
+    async def main():
+        async with ReplicaSupervisor(spec, sup_cfg) as sup:
+            stream = await sup.submit(prompt, max_tokens=16)
+            got = []
+
+            async def consume():
+                async for tok in stream:
+                    got.append(tok)
+
+            task = asyncio.create_task(consume())
+            while not got:                       # first token flowed
+                await asyncio.sleep(0.01)
+            await sup.kill_replica()             # respawn 1: within budget
+            while sup.n_spawns < 2:
+                await asyncio.sleep(0.05)
+            while len(got) < 2:                  # recomputation caught up
+                await asyncio.sleep(0.01)
+            await sup.kill_replica()             # respawn 2: budget blown
+            await task
+            assert stream.completion is not None
+            assert stream.completion.finish_reason == "error"
+            assert stream.completion.tokens == got   # delivered retained
+            assert not sup.healthy
+            with pytest.raises(ServiceError, match="unhealthy"):
+                await sup.submit(prompt, max_tokens=4)
+            assert sup.metrics.snapshot()["error"] == 1
+        # containment is a reported state: stop() does not raise
+
+    asyncio.run(main())
+
+
+def test_watchdog_kills_wedged_step_then_contains(plan16, tmp_path):
+    """A step that overstays ``watchdog_timeout_s`` (injected stall) after
+    the incarnation's compile-amnestied first step is declared dead: the
+    supervisor SIGKILLs the worker and fails over; with ``max_respawns=0``
+    the very first watchdog failover exhausts the budget and the stream
+    ends ``"error"`` — replica death via the watchdog, not process exit."""
+    inj = FaultInjector(0, {"stall": 1.0}, stall_s=2.0)
+    spec = _spec(ATTN, plan16, fault_injector=inj)
+    [prompt] = _prompts(ATTN, 1, rng_seed=5, lo=3, hi=6)
+    sup_cfg = SupervisorConfig(
+        checkpoint_path=str(tmp_path / "replica.ckpt"),
+        checkpoint_every_steps=10**6, fsync=False,
+        watchdog_timeout_s=0.5, heartbeat_s=0.02, max_respawns=0)
+
+    async def main():
+        async with ReplicaSupervisor(spec, sup_cfg) as sup:
+            stream = await sup.submit(prompt, max_tokens=16)
+            toks, comp = await stream.drain()
+            assert comp.finish_reason == "error"
+            assert not sup.healthy
+            assert "watchdog" in sup._unhealthy_reason
+            assert sup.n_failovers == 1
+
+    asyncio.run(main())
+
+
+def test_supervisor_clean_run_and_stop(plan16, tmp_path):
+    """No kills: the supervised replica is just a slower GenerateService —
+    full parity, periodic checkpoints land, stats round-trips, and stop()
+    shuts the worker down cleanly (no failover recorded)."""
+    spec = _spec(ATTN, plan16)
+    prompts = _prompts(ATTN, 3, rng_seed=4)
+    sampling = _mixed_sampling(3, max_tokens=6)
+    expect = generate(spec.build(), prompts, sampling)
+
+    sup_cfg = SupervisorConfig(
+        checkpoint_path=str(tmp_path / "replica.ckpt"),
+        checkpoint_every_steps=2, fsync=True)
+    streamed, comps, sup, stats = asyncio.run(_run_with_kills(
+        spec, prompts, sampling, sup_cfg, kill_at=()))
+
+    assert sup.n_failovers == 0 and sup.n_spawns == 1
+    for got, comp, e in zip(streamed, comps, expect):
+        assert got == e.tokens and comp.tokens == got
+    assert sup.metrics.snapshot()["failover"]["checkpoints"] >= 1
+    # the fsynced checkpoint file survives on disk with its .prev rotation
+    assert os.path.exists(sup_cfg.checkpoint_path) \
+        or os.path.exists(sup_cfg.checkpoint_path + ".prev")
+    assert stats["pool_free"] == stats["pool_blocks"]
+
+
+def test_supervisor_config_validation():
+    with pytest.raises(ValueError, match="max_pending"):
+        SupervisorConfig(checkpoint_path="x", max_pending=0)
+    with pytest.raises(ValueError, match="max_respawns"):
+        SupervisorConfig(checkpoint_path="x", max_respawns=-1)
+    with pytest.raises(ValueError, match="watchdog"):
+        SupervisorConfig(checkpoint_path="x", watchdog_timeout_s=0.0)
